@@ -1,0 +1,27 @@
+"""Shared benchmark utilities: suite, timing, CSV output."""
+from __future__ import annotations
+
+import time
+from typing import Callable
+
+import jax
+
+
+def time_solve(fn: Callable, *args, repeats: int = 3, **kw):
+    """Median wall time of fn(*args) with device sync."""
+    best = []
+    out = None
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        out = fn(*args, **kw)
+        jax.block_until_ready(getattr(out, "x", out))
+        best.append(time.perf_counter() - t0)
+    best.sort()
+    return out, best[len(best) // 2]
+
+
+def emit(rows, header):
+    print(",".join(header))
+    for r in rows:
+        print(",".join(str(r.get(h, "")) for h in header))
+    return rows

@@ -1,0 +1,27 @@
+"""§Roofline — render the dry-run artifacts as the per-cell table."""
+from __future__ import annotations
+
+import os
+
+from repro.roofline.report import format_table, load_results, one_liner
+
+ART = os.path.join(os.path.dirname(__file__), "..", "experiments", "dryrun")
+
+
+def run(mesh: str = "single"):
+    res = load_results(os.path.join(ART, mesh))
+    if not res:
+        print(f"(no dry-run artifacts under experiments/dryrun/{mesh} — "
+              f"run `python -m repro.launch.dryrun --all --mesh {mesh}`)")
+        return []
+    print(format_table(res))
+    print()
+    worst = sorted(res, key=lambda r: r.get("roofline", {}).get(
+        "mfu_at_roofline") or 1.0)[:3]
+    for r in worst:
+        print(one_liner(r))
+    return res
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,46 @@
+"""Benchmark driver — one section per paper table/figure.
+
+``python -m benchmarks.run [--tier small|large|all]``
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--tier", default="small",
+                    choices=["small", "large", "all"])
+    args = ap.parse_args(argv)
+
+    import jax
+    jax.config.update("jax_enable_x64", True)
+
+    from benchmarks import (fig9_residual_traces, roofline_table,
+                            spmv_kernel, tab4_solver_time, tab5_throughput,
+                            tab7_iterations, vsr_access_counts)
+
+    sections = [
+        ("§5.5 VSR access accounting (naive 19 -> 14 -> 13)",
+         vsr_access_counts.run, {}),
+        ("Table 4: solver time", tab4_solver_time.run,
+         {"tier": args.tier}),
+        ("Table 5: throughput + fraction-of-peak", tab5_throughput.run,
+         {"tier": args.tier}),
+        ("Table 7: iteration counts vs FP64", tab7_iterations.run,
+         {"tier": args.tier}),
+        ("Fig. 9: residual traces", fig9_residual_traces.run, {}),
+        ("Kernel: SpMV stream bytes per scheme", spmv_kernel.run,
+         {"tier": args.tier}),
+        ("Roofline: dry-run table (single pod)", roofline_table.run, {}),
+    ]
+    for title, fn, kw in sections:
+        print(f"\n=== {title} ===")
+        t0 = time.time()
+        fn(**kw)
+        print(f"--- ({time.time() - t0:.1f}s)")
+
+
+if __name__ == "__main__":
+    main()

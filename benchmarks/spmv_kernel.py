@@ -1,0 +1,39 @@
+"""Kernel-level microbenchmark — SpMV byte/FLOP accounting per scheme.
+
+The paper's Challenge-3 arithmetic realized: per-nonzero stream bytes by
+precision scheme, padding efficiency of the banked layouts, and the
+bandwidth-bound time projection per SpMV on v5e.
+"""
+from __future__ import annotations
+
+from benchmarks.common import emit
+from repro.core.precision import SCHEMES
+from repro.roofline.model import V5E
+from repro.sparse import benchmark_suite, csr_to_bell
+from repro.sparse.ellpack import csr_to_ellpack
+
+HEADER = ["matrix", "nnz", "layout", "pad_eff", "scheme", "stream_MB",
+          "proj_spmv_us_v5e"]
+
+
+def run(tier: str = "small"):
+    rows = []
+    for name, a in list(benchmark_suite(tier).items())[:4]:
+        bell = csr_to_bell(a, block_rows=256, col_tile=512)
+        ell = csr_to_ellpack(a, block_rows=256, col_tile=512)
+        for layout, m in (("bell", bell), ("ellpack", ell)):
+            for scheme_name in ("fp64", "mixed_v3", "tpu_v3"):
+                s = SCHEMES[scheme_name]
+                nbytes = m.stored_entries * s.nonzero_stream_bytes()
+                rows.append({
+                    "matrix": name, "nnz": a.nnz, "layout": layout,
+                    "pad_eff": f"{m.padding_efficiency:.3f}",
+                    "scheme": scheme_name,
+                    "stream_MB": f"{nbytes / 1e6:.2f}",
+                    "proj_spmv_us_v5e": f"{nbytes / V5E.hbm_bw * 1e6:.1f}",
+                })
+    return emit(rows, HEADER)
+
+
+if __name__ == "__main__":
+    run()

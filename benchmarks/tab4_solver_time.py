@@ -1,0 +1,52 @@
+"""Paper Table 4 — solver time per matrix, XcgSolver-baseline protocol.
+
+Four solver variants stand in for the paper's four platforms:
+
+  ==============  =====================================================
+  paper column    this repo
+  ==============  =====================================================
+  XcgSolver       fp64, naive (no VSR: method=vsr + fp64, no fusion win
+                  is the closest honest CPU proxy)
+  SerpensCG       fp64 + stream ISA (vm path, paper policy)
+  CALLIPEPLA      mixed_v3 + VSR (the full reproduction)
+  (beyond-paper)  mixed_v3 + pipelined single-reduction CG
+  ==============  =====================================================
+
+Protocol (§7.1): b = 1⃗, x₀ = 0⃗, stop at ‖r‖² < 1e-12, 20k iteration cap.
+Wall times are CPU-host numbers (relative speedups are the signal; TPU
+projections live in the roofline analysis).
+"""
+from __future__ import annotations
+
+import jax
+
+from benchmarks.common import emit, time_solve
+from repro.core.cg import jpcg_solve
+from repro.sparse import benchmark_suite
+
+HEADER = ["matrix", "n", "nnz", "fp64_s", "v3_vsr_s", "v3_pipe_s",
+          "speedup_v3", "iters_fp64", "iters_v3"]
+
+
+def run(tier: str = "small"):
+    jax.config.update("jax_enable_x64", True)
+    rows = []
+    for name, a in benchmark_suite(tier).items():
+        r64, t64 = time_solve(jpcg_solve, a, scheme="fp64", tol=1e-12,
+                              maxiter=20_000)
+        rv3, tv3 = time_solve(jpcg_solve, a, scheme="mixed_v3", tol=1e-12,
+                              maxiter=20_000)
+        rp, tp = time_solve(jpcg_solve, a, scheme="mixed_v3", tol=1e-12,
+                            maxiter=20_000, method="pipelined")
+        rows.append({
+            "matrix": name, "n": a.shape[0], "nnz": a.nnz,
+            "fp64_s": f"{t64:.4f}", "v3_vsr_s": f"{tv3:.4f}",
+            "v3_pipe_s": f"{tp:.4f}",
+            "speedup_v3": f"{t64 / tv3:.3f}",
+            "iters_fp64": r64.iterations, "iters_v3": rv3.iterations,
+        })
+    return emit(rows, HEADER)
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,64 @@
+"""Paper Table 5 — throughput (GFLOP/s) and fraction-of-peak.
+
+FLOP counting follows the paper: per iteration the JPCG performs one SpMV
+(2·nnz) + 3 dots (2n each) + 3 axpys (2n) + 1 element-wise divide (n) —
+(# floating-point ops) / (solver time).  CPU-host numbers give the
+measured column; the v5e projection divides the per-iteration byte
+traffic (the solver is bandwidth-bound, §7.6) by 819 GB/s — exactly the
+paper's f = BW/r matching argument, stated as a roofline.
+"""
+from __future__ import annotations
+
+import jax
+
+from benchmarks.common import emit, time_solve
+from repro.core.cg import jpcg_solve
+from repro.core.precision import get_scheme
+from repro.core.vsr import schedule
+from repro.roofline.model import V5E
+from repro.sparse import benchmark_suite
+
+HEADER = ["matrix", "n", "nnz", "scheme", "time_s", "iters", "gflops_host",
+          "proj_v5e_gflops", "proj_fop_pct"]
+
+
+def _flops_per_iter(n, nnz):
+    return 2 * nnz + 3 * 2 * n + 3 * 2 * n + n
+
+
+def _bytes_per_iter(n, nnz, scheme):
+    """HBM bytes per iteration under the min-traffic VSR schedule."""
+    s = schedule(policy="min_traffic")
+    vec_bytes = (s.n_reads + s.n_writes) * n * scheme.vector_bytes
+    mat_bytes = nnz * scheme.nonzero_stream_bytes()
+    return vec_bytes + mat_bytes
+
+
+def run(tier: str = "small"):
+    jax.config.update("jax_enable_x64", True)
+    rows = []
+    for name, a in benchmark_suite(tier).items():
+        n, nnz = a.shape[0], a.nnz
+        for scheme_name in ("fp64", "mixed_v3"):
+            sch = get_scheme(scheme_name)
+            res, t = time_solve(jpcg_solve, a, scheme=scheme_name,
+                                tol=1e-12, maxiter=20_000)
+            fl = _flops_per_iter(n, nnz) * res.iterations
+            gf_host = fl / t / 1e9
+            # bandwidth-bound projection on v5e
+            bpi = _bytes_per_iter(n, nnz, sch)
+            t_proj = bpi * res.iterations / V5E.hbm_bw
+            gf_proj = fl / t_proj / 1e9
+            fop = gf_proj * 1e9 / V5E.peak_flops("f32") * 100
+            rows.append({
+                "matrix": name, "n": n, "nnz": nnz, "scheme": scheme_name,
+                "time_s": f"{t:.4f}", "iters": res.iterations,
+                "gflops_host": f"{gf_host:.2f}",
+                "proj_v5e_gflops": f"{gf_proj:.1f}",
+                "proj_fop_pct": f"{fop:.3f}",
+            })
+    return emit(rows, HEADER)
+
+
+if __name__ == "__main__":
+    run()

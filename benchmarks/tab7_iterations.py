@@ -1,0 +1,41 @@
+"""Paper Table 7 — iteration counts per scheme vs the FP64 reference.
+
+The paper's claim: CALLIPEPLA (Mix-V3) stays within a few iterations of
+the CPU FP64 reference while XcgSolver drifts by hundreds–thousands.
+Here the FP64 run is the reference; the diff column must be ≈0 for V3.
+"""
+from __future__ import annotations
+
+import jax
+
+from benchmarks.common import emit
+from repro.core.cg import jpcg_solve
+from repro.sparse import benchmark_suite
+
+HEADER = ["matrix", "iters_fp64", "iters_v3", "diff_v3", "iters_v2",
+          "diff_v2", "iters_v1", "diff_v1"]
+
+
+def run(tier: str = "small"):
+    jax.config.update("jax_enable_x64", True)
+    rows = []
+    for name, a in benchmark_suite(tier).items():
+        its = {}
+        for s in ("fp64", "mixed_v3", "mixed_v2", "mixed_v1"):
+            r = jpcg_solve(a, scheme=s, tol=1e-12, maxiter=20_000)
+            its[s] = r.iterations if r.converged else 20_000
+        rows.append({
+            "matrix": name,
+            "iters_fp64": its["fp64"],
+            "iters_v3": its["mixed_v3"],
+            "diff_v3": its["mixed_v3"] - its["fp64"],
+            "iters_v2": its["mixed_v2"],
+            "diff_v2": its["mixed_v2"] - its["fp64"],
+            "iters_v1": its["mixed_v1"],
+            "diff_v1": its["mixed_v1"] - its["fp64"],
+        })
+    return emit(rows, HEADER)
+
+
+if __name__ == "__main__":
+    run()

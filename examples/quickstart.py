@@ -1,0 +1,29 @@
+"""Quickstart — solve a linear system with Callipepla-JAX in 20 lines.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+
+jax.config.update("jax_enable_x64", True)   # faithful FP64 tier on CPU
+
+import numpy as np                                     # noqa: E402
+
+from repro.core.cg import jpcg_solve                   # noqa: E402
+from repro.sparse import poisson_2d, csr_spmv          # noqa: E402
+
+# A 2-D Poisson problem (ecology2-class structure, paper Table 3).
+A = poisson_2d(64)                 # 4096 × 4096, SPD
+print(f"matrix: n={A.shape[0]}, nnz={A.nnz}")
+
+# Paper protocol (§7.1): b = 1⃗, x0 = 0⃗, ‖r‖² < 1e-12, 20k-iteration cap.
+res = jpcg_solve(A, scheme="mixed_v3", tol=1e-12, maxiter=20_000)
+print(res)
+
+b = np.ones(A.shape[0])
+true_resid = np.linalg.norm(csr_spmv(A, np.asarray(res.x)) - b)
+print(f"‖A·x − b‖ = {true_resid:.3e}")
+
+# The same solve under the paper's other precision schemes:
+for scheme in ("fp64", "mixed_v1"):
+    r = jpcg_solve(A, scheme=scheme, tol=1e-12, maxiter=20_000)
+    print(f"{scheme:9s}: {r.iterations} iterations, converged={r.converged}")

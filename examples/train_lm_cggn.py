@@ -1,0 +1,92 @@
+"""End-to-end LM training driver — AdamW first, then the CGGN optimizer
+whose inner loop IS the paper's JPCG solver (matrix-free Gauss–Newton).
+
+Trains a ~100M-param gemma3-family model for a few hundred steps on the
+synthetic Markov stream; loss drops visibly under both optimizers.
+
+    PYTHONPATH=src python examples/train_lm_cggn.py [--steps 200]
+"""
+import argparse
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.models import count_params, forward_logits, init_params
+from repro.train import (AdamWConfig, CGGNConfig, DataConfig, SyntheticLM,
+                         Trainer, TrainerConfig, adamw_init, cggn_init,
+                         cggn_update, make_train_step)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--cggn-steps", type=int, default=20)
+    ap.add_argument("--seq-len", type=int, default=256)
+    ap.add_argument("--batch", type=int, default=16)
+    ap.add_argument("--size", choices=["100m", "25m"], default="100m",
+                    help="~100M is the deliverable scale (takes a while "
+                         "on CPU); 25m for a quick demo")
+    args = ap.parse_args()
+
+    # gemma3-family config reduced from the 1B.
+    if args.size == "100m":
+        cfg = dataclasses.replace(
+            get_config("gemma3-1b"), name="gemma3-100m", n_layers=6,
+            d_model=512, n_heads=8, n_kv_heads=2, d_ff=1536, head_dim=64,
+            vocab=8192, sliding_window=128, dtype="float32", remat=False)
+    else:
+        cfg = dataclasses.replace(
+            get_config("gemma3-1b"), name="gemma3-25m", n_layers=4,
+            d_model=256, n_heads=4, n_kv_heads=1, d_ff=768, head_dim=64,
+            vocab=4096, sliding_window=128, dtype="float32", remat=False)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    print(f"model: {cfg.name}, {count_params(params) / 1e6:.1f}M params")
+
+    data = SyntheticLM(DataConfig(vocab=cfg.vocab, seq_len=args.seq_len,
+                                  global_batch=args.batch, source="markov"))
+
+    # ---------------- phase 1: AdamW ----------------
+    opt = AdamWConfig(lr=3e-3)
+    step_fn = make_train_step(cfg, opt=opt, microbatches=2)
+    trainer = Trainer(cfg, data, step_fn, params, adamw_init(params, opt),
+                      TrainerConfig(total_steps=args.steps, ckpt_every=100,
+                                    ckpt_dir="/tmp/ex_cggn_ckpt",
+                                    log_every=25))
+    log = trainer.run()
+    print(f"AdamW: loss {log[0]['loss']:.3f} -> {log[-1]['loss']:.3f}")
+
+    # ---------------- phase 2: CGGN (JPCG inner solver) ----------------
+    params = trainer.params
+    ccfg = CGGNConfig(lr=0.5, damping=0.1, cg_iters=10, scheme="tpu_fp32",
+                      max_delta_norm=2.0)
+    state = cggn_init(params, jax.random.PRNGKey(1))
+    print(f"\nCGGN fine-tune: each step solves (G+λI)δ=-g with "
+          f"{ccfg.cg_iters}-iteration JPCG (scheme={ccfg.scheme})")
+    for step in range(args.cggn_steps):
+        batch = data.batch_at(10_000 + step)
+
+        def logits_fn(p):
+            return forward_logits(p, cfg, batch)
+
+        def loss_logits(lg):
+            lse = jax.nn.logsumexp(lg, axis=-1)
+            picked = jnp.take_along_axis(
+                lg, batch["labels"][..., None], axis=-1)[..., 0]
+            return jnp.mean(lse - picked)
+
+        def vag(p):
+            return jax.value_and_grad(
+                lambda q: loss_logits(logits_fn(q)))(p)
+
+        params, state, m = cggn_update(
+            params, state, loss_logits_fn=loss_logits, logits_fn=logits_fn,
+            loss_value_and_grad=vag, cfg=ccfg)
+        if step % 5 == 0 or step == args.cggn_steps - 1:
+            print(f"  cggn step {step:3d}  loss {float(m['loss']):.4f}  "
+                  f"|δ| {float(m['delta_norm']):.3f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,125 @@
+"""Architecture registry — ``--arch <id>`` resolution + dry-run input specs.
+
+``input_specs(arch, shape)`` returns ShapeDtypeStruct stand-ins for every
+model input of that (architecture × shape) cell: weak-type-correct,
+shardable, **no device allocation** — the dry-run lowers ``train_step`` /
+``prefill_step`` / ``serve_step`` against them.
+
+``applicable(cfg, shape)`` encodes the assignment's skip rules:
+`long_500k` needs sub-quadratic attention (SSM / hybrid / windowed);
+pure full-attention archs record ``SKIP(reason)``.
+"""
+from __future__ import annotations
+
+import importlib
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.shapes import SHAPES, Shape
+from repro.models.config import ModelConfig
+
+__all__ = ["ARCHS", "get_config", "input_specs", "applicable", "SHAPES",
+           "Shape", "cells"]
+
+#: arch id -> module (one file per assigned architecture)
+ARCHS = {
+    "zamba2-1.2b": "zamba2_1_2b",
+    "whisper-base": "whisper_base",
+    "granite-34b": "granite_34b",
+    "h2o-danube-3-4b": "h2o_danube_3_4b",
+    "qwen2.5-32b": "qwen2_5_32b",
+    "gemma3-1b": "gemma3_1b",
+    "mamba2-780m": "mamba2_780m",
+    "granite-moe-1b-a400m": "granite_moe_1b_a400m",
+    "llama4-scout-17b-a16e": "llama4_scout_17b_a16e",
+    "internvl2-76b": "internvl2_76b",
+}
+
+
+def get_config(arch: str) -> ModelConfig:
+    if isinstance(arch, ModelConfig):
+        return arch
+    if arch not in ARCHS:
+        raise KeyError(f"unknown arch {arch!r}; available: {sorted(ARCHS)}")
+    mod = importlib.import_module(f"repro.configs.{ARCHS[arch]}")
+    return mod.CONFIG
+
+
+def applicable(cfg: ModelConfig, shape: Shape) -> Tuple[bool, str]:
+    """(runs?, reason-if-skipped) per the assignment's skip rules."""
+    if shape.needs_subquadratic and not cfg.supports_long_context:
+        return False, ("full attention is O(S^2)/O(S)-state at 500k; "
+                       "skip per assignment (sub-quadratic archs only)")
+    if shape.kind == "decode" and cfg.encoder is not None \
+            and shape.needs_subquadratic:
+        return False, "enc-dec decoder is full-attention at 500k"
+    return True, ""
+
+
+def _extras(cfg: ModelConfig, batch: int) -> Dict[str, jax.ShapeDtypeStruct]:
+    dt = jnp.dtype(cfg.dtype)
+    out: Dict[str, jax.ShapeDtypeStruct] = {}
+    if cfg.n_patches:
+        out["patch_embeds"] = jax.ShapeDtypeStruct(
+            (batch, cfg.n_patches, cfg.d_model), dt)
+    if cfg.encoder is not None:
+        out["audio_embeds"] = jax.ShapeDtypeStruct(
+            (batch, cfg.encoder.n_ctx, cfg.d_model), dt)
+    return out
+
+
+def input_specs(arch, shape_name: str,
+                cache_dtype=jnp.bfloat16) -> Dict[str, object]:
+    """ShapeDtypeStruct inputs for one (arch × shape) cell.
+
+    train:   {tokens, labels} (+frontend embeds)
+    prefill: {tokens} (+frontend embeds)
+    decode:  {token, pos, cache} — cache shapes via ``jax.eval_shape`` over
+             the model's ``init_cache`` (no allocation).
+    """
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    ok, why = applicable(cfg, shape)
+    if not ok:
+        raise ValueError(f"{cfg.name} × {shape_name}: SKIP({why})")
+    i32 = jnp.int32
+
+    if shape.kind == "train":
+        specs = {
+            "tokens": jax.ShapeDtypeStruct((shape.global_batch,
+                                            shape.seq_len), i32),
+            "labels": jax.ShapeDtypeStruct((shape.global_batch,
+                                            shape.seq_len), i32),
+        }
+        specs.update(_extras(cfg, shape.global_batch))
+        return specs
+
+    if shape.kind == "prefill":
+        specs = {"tokens": jax.ShapeDtypeStruct(
+            (shape.global_batch, shape.seq_len), i32)}
+        specs.update(_extras(cfg, shape.global_batch))
+        return specs
+
+    # decode: one new token against a cache of seq_len context
+    from repro.models.api import init_cache
+    cache = jax.eval_shape(
+        lambda: init_cache(cfg, shape.global_batch, shape.seq_len,
+                           dtype=cache_dtype))
+    return {
+        "token": jax.ShapeDtypeStruct((shape.global_batch,), i32),
+        "pos": jax.ShapeDtypeStruct((), i32),
+        "cache": cache,
+    }
+
+
+def cells(archs=None, shapes=None):
+    """Iterate (arch, shape, runs?, skip_reason) over the full matrix."""
+    archs = archs or list(ARCHS)
+    shapes = shapes or list(SHAPES)
+    for a in archs:
+        cfg = get_config(a)
+        for s in shapes:
+            ok, why = applicable(cfg, SHAPES[s])
+            yield a, s, ok, why

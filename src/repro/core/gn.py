@@ -1,0 +1,84 @@
+"""Matrix-free Gauss–Newton operators — the solver ↔ LM-training bridge.
+
+The CGGN (Hessian-free) optimizer solves ``(G + λI) δ = −g`` each step,
+where ``G`` is the generalized Gauss–Newton matrix of the loss.  ``G`` is
+SPD, never materialized: ``G·v = Jᵀ (H_L (J v))`` via a jvp through the
+model and a vjp back (standard Pearlmutter trick).  That makes it exactly
+the operator class Callipepla's JPCG consumes — with the paper's
+mixed-precision scheme mapped one tier down (DESIGN.md §2): the *matvec*
+runs at the model's compute dtype (bf16/fp32 = "the matrix is stored low"),
+while the CG iterate vectors stay fp32 (= "vectors stay high").
+
+The Jacobi preconditioner is the diagonal of ``G + λI``, estimated with
+Hutchinson probes: ``diag(G) ≈ E[e ⊙ (G e)]`` over Rademacher ``e``.
+"""
+from __future__ import annotations
+
+from typing import Callable, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["make_ggn_matvec", "estimate_jacobi_diag", "flatten_like"]
+
+
+def flatten_like(tree):
+    """Ravel a pytree to a single vector + unravel fn (pure-jax, no flax)."""
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    shapes = [l.shape for l in leaves]
+    sizes = [int(jnp.size(l)) for l in leaves]
+    dtype = jnp.result_type(*[l.dtype for l in leaves]) if leaves else jnp.float32
+
+    def ravel(t):
+        ls = jax.tree_util.tree_leaves(t)
+        return jnp.concatenate([jnp.ravel(l).astype(dtype) for l in ls]) \
+            if ls else jnp.zeros(0, dtype)
+
+    def unravel(v):
+        out, ofs = [], 0
+        for sh, sz, leaf in zip(shapes, sizes, leaves):
+            out.append(v[ofs: ofs + sz].reshape(sh).astype(leaf.dtype))
+            ofs += sz
+        return jax.tree_util.tree_unflatten(treedef, out)
+
+    return ravel(tree), ravel, unravel
+
+
+def make_ggn_matvec(loss_logits_fn: Callable, logits_fn: Callable, params,
+                    damping: float = 1e-3) -> Tuple[Callable, int]:
+    """Build v ↦ (G + λI)·v  for  G = Jᵀ H_L J  (flattened param space).
+
+    ``logits_fn(params) -> logits`` is the model on a fixed batch;
+    ``loss_logits_fn(logits) -> scalar`` is the loss as a function of the
+    logits (so H_L is the small per-logit Hessian, PSD for CE/MSE).
+    """
+    theta0, _, unravel = flatten_like(params)
+    n = int(theta0.shape[0])
+
+    def matvec(v: jax.Array) -> jax.Array:
+        vt = unravel(v)
+        # J v  (forward-mode through the model)
+        logits, jv = jax.jvp(logits_fn, (params,), (vt,))
+        # H_L (J v) via double-grad of the loss wrt logits
+        def g(lg):
+            return jax.grad(loss_logits_fn)(lg)
+        _, hjv = jax.jvp(g, (logits,), (jv,))
+        # Jᵀ (H_L J v)  (reverse-mode back)
+        _, vjp = jax.vjp(logits_fn, params)
+        (gv,) = vjp(hjv)
+        flat, _, _ = flatten_like(gv)
+        return flat + damping * v.astype(flat.dtype)
+
+    return matvec, n
+
+
+def estimate_jacobi_diag(matvec: Callable, n: int, key: jax.Array,
+                         probes: int = 8, damping: float = 1e-3,
+                         dtype=jnp.float32) -> jax.Array:
+    """Hutchinson estimate of diag(G) + λ, clipped positive (SPD guard)."""
+    def one(k):
+        e = jax.random.rademacher(k, (n,), dtype=dtype)
+        return e * matvec(e)
+
+    est = jnp.mean(jax.vmap(one)(jax.random.split(key, probes)), axis=0)
+    return jnp.maximum(est, damping)

@@ -1,0 +1,177 @@
+"""Linear operators consumed by the JPCG solver.
+
+Every operator exposes ``matvec`` (the SpMV, with the precision scheme's
+casts applied *inside*), ``diag`` (Jacobi preconditioner source), and ``n``.
+Concrete operators:
+
+* :class:`BellOperator` — banked-ELL sparse matrix on device (the production
+  path; same dataflow as the Pallas kernel, pure-jnp/XLA execution).
+* :class:`DenseOperator` — small dense SPD matrices (tests).
+* :class:`CallableOperator` — matrix-free (the CGGN optimizer's GGN-vector
+  product plugs in here).
+
+Mixed-precision contract (paper §6): the operator *stores* A at
+``scheme.matrix_dtype``; ``matvec`` casts the incoming vector to
+``scheme.spmv_in_dtype`` (a true rounding — this is where Mix-V1/V2 lose
+information), multiplies/accumulates at ``scheme.spmv_acc_dtype``, and
+returns at ``scheme.vector_dtype``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.precision import PrecisionScheme, get_scheme
+from repro.sparse.bell import BellMatrix, csr_to_bell
+from repro.sparse.csr import CSRMatrix
+
+__all__ = ["BellOperator", "DenseOperator", "CallableOperator", "as_operator",
+           "bell_spmv_jnp"]
+
+
+def bell_spmv_jnp(tile_cols: jax.Array, vals: jax.Array, local_rows: jax.Array,
+                  local_cols: jax.Array, x_pad: jax.Array, *,
+                  block_rows: int, col_tile: int,
+                  scheme: PrecisionScheme) -> jax.Array:
+    """Banked-ELL SpMV, pure jnp (the XLA backend; also the kernel oracle).
+
+    ``x_pad`` has length ``n_col_tiles * col_tile``; returns a vector of
+    length ``n_row_blocks * block_rows`` at ``scheme.vector_dtype``.
+    """
+    B, T, L = vals.shape
+    acc = scheme.spmv_acc_dtype
+    x_in = x_pad.astype(scheme.spmv_in_dtype)           # the Mix-V1/V2 rounding
+    x_tiles = x_in.reshape(-1, col_tile)[tile_cols]     # [B, T, C] tile gather
+    x_g = jnp.take_along_axis(x_tiles, local_cols, axis=-1)   # [B, T, L]
+    prod = vals.astype(acc) * x_g.astype(acc)
+    seg = (jnp.arange(B, dtype=jnp.int32)[:, None, None] * block_rows
+           + local_rows).reshape(-1)
+    y = jax.ops.segment_sum(prod.reshape(-1), seg,
+                            num_segments=B * block_rows)
+    return y.astype(scheme.vector_dtype)
+
+
+@dataclasses.dataclass(frozen=True)
+class BellOperator:
+    """Banked-ELL matrix resident on device at the scheme's matrix dtype."""
+
+    tile_cols: jax.Array   # int32[B, T]
+    vals: jax.Array        # matrix_dtype[B, T, L]
+    local_rows: jax.Array  # int32[B, T, L]
+    local_cols: jax.Array  # int32[B, T, L]
+    diag: jax.Array        # vector_dtype[n]
+    n: int
+    block_rows: int
+    col_tile: int
+    padded_cols: int
+    scheme: PrecisionScheme
+    nnz: int
+
+    @classmethod
+    def from_bell(cls, m: BellMatrix, scheme, diag: np.ndarray) -> "BellOperator":
+        scheme = get_scheme(scheme)
+        return cls(
+            tile_cols=jnp.asarray(m.tile_cols),
+            vals=jnp.asarray(m.vals).astype(scheme.matrix_dtype),
+            local_rows=jnp.asarray(m.local_rows),
+            local_cols=jnp.asarray(m.local_cols),
+            diag=jnp.asarray(diag).astype(scheme.vector_dtype),
+            n=m.shape[0], block_rows=m.block_rows, col_tile=m.col_tile,
+            padded_cols=m.padded_cols, scheme=scheme, nnz=m.nnz)
+
+    def matvec(self, x: jax.Array) -> jax.Array:
+        x_pad = jnp.zeros(self.padded_cols, dtype=x.dtype).at[: self.n].set(x)
+        y = bell_spmv_jnp(self.tile_cols, self.vals, self.local_rows,
+                          self.local_cols, x_pad, block_rows=self.block_rows,
+                          col_tile=self.col_tile, scheme=self.scheme)
+        return y[: self.n]
+
+    def flops_per_matvec(self) -> int:
+        return 2 * self.nnz
+
+
+@dataclasses.dataclass(frozen=True)
+class DenseOperator:
+    a: jax.Array           # matrix_dtype[n, n]
+    diag: jax.Array        # vector_dtype[n]
+    scheme: PrecisionScheme
+
+    @classmethod
+    def from_dense(cls, a: np.ndarray, scheme) -> "DenseOperator":
+        scheme = get_scheme(scheme)
+        return cls(a=jnp.asarray(a).astype(scheme.matrix_dtype),
+                   diag=jnp.asarray(np.diag(np.asarray(a))).astype(scheme.vector_dtype),
+                   scheme=scheme)
+
+    @property
+    def n(self) -> int:
+        return int(self.a.shape[0])
+
+    def matvec(self, x: jax.Array) -> jax.Array:
+        acc = self.scheme.spmv_acc_dtype
+        x_in = x.astype(self.scheme.spmv_in_dtype)
+        y = self.a.astype(acc) @ x_in.astype(acc)
+        return y.astype(self.scheme.vector_dtype)
+
+    def flops_per_matvec(self) -> int:
+        return 2 * self.n * self.n
+
+
+@dataclasses.dataclass(frozen=True)
+class CallableOperator:
+    """Matrix-free operator: fn must map vector_dtype -> vector_dtype."""
+
+    fn: Callable[[jax.Array], jax.Array]
+    diag: jax.Array
+    n: int
+    scheme: PrecisionScheme
+
+    def matvec(self, x: jax.Array) -> jax.Array:
+        x_in = x.astype(self.scheme.spmv_in_dtype)
+        return self.fn(x_in).astype(self.scheme.vector_dtype)
+
+    def flops_per_matvec(self) -> int:
+        return 0  # unknown for matrix-free
+
+
+# Register operators as pytrees so they can be passed straight into jitted
+# solvers (arrays are leaves; sizes/scheme are static metadata, so one
+# compiled solver is reused across every matrix with the same padded bucket
+# — the paper's "arbitrary problem without re-synthesis" goal).
+jax.tree_util.register_dataclass(
+    BellOperator,
+    data_fields=["tile_cols", "vals", "local_rows", "local_cols", "diag"],
+    meta_fields=["n", "block_rows", "col_tile", "padded_cols", "scheme", "nnz"])
+jax.tree_util.register_dataclass(
+    DenseOperator, data_fields=["a", "diag"], meta_fields=["scheme"])
+jax.tree_util.register_dataclass(
+    CallableOperator, data_fields=["diag"], meta_fields=["fn", "n", "scheme"])
+
+
+def as_operator(a, scheme, *, diag=None, n=None, block_rows: int = 256,
+                col_tile: int = 512):
+    """Coerce a CSRMatrix / BellMatrix / dense array / callable to an operator."""
+    scheme = get_scheme(scheme)
+    if isinstance(a, (BellOperator, DenseOperator, CallableOperator)):
+        return a
+    if isinstance(a, CSRMatrix):
+        d = a.diagonal() if diag is None else diag
+        bell = csr_to_bell(a, block_rows=block_rows, col_tile=col_tile)
+        return BellOperator.from_bell(bell, scheme, d)
+    if isinstance(a, BellMatrix):
+        if diag is None:
+            raise ValueError("BellMatrix input requires an explicit diag")
+        return BellOperator.from_bell(a, scheme, diag)
+    if callable(a):
+        if diag is None or n is None:
+            raise ValueError("callable operator requires diag and n")
+        return CallableOperator(fn=a, diag=jnp.asarray(diag).astype(
+            scheme.vector_dtype), n=n, scheme=scheme)
+    arr = np.asarray(a)
+    if arr.ndim == 2:
+        return DenseOperator.from_dense(arr, scheme)
+    raise TypeError(f"cannot build an operator from {type(a)}")

@@ -1,0 +1,118 @@
+"""Phase-structured JPCG loop — the production solver (paper Alg. 1 + §5).
+
+The loop body is written exactly along the VSR phase partition computed by
+:mod:`repro.core.vsr`:
+
+* **Phase 1**: M1 SpMV (``ap = A·p``) then M2 dot (``pap = p·ap``) —
+  barrier: ``alpha = rz / pap``.
+* **Phase 2**: fused ``r' = r − α·ap`` (M4), ``rr = r'·r'`` (M8, hoisted
+  before M5 like the paper's controller so termination is known as early
+  as possible), ``z = M⁻¹·r'`` (M5), ``rz' = r'·z`` (M6) — barrier:
+  ``beta = rz'/rz``.
+* **Phase 3**: ``p' = z + β·p`` (M7), ``x' = x + α·p`` (M3).
+
+``z`` is never materialized to HBM (paper §5.3): inside one jit region XLA
+fuses the phase-2/3 elementwise chains so ``z`` lives only in registers/
+VMEM; the Pallas backend (:mod:`repro.kernels.fused_phase`) makes the same
+guarantee explicitly.  Note a pleasing collapse: the paper's "recompute M4+
+M5 in phase 3" and our min-traffic "store r' in phase 2" schedules produce
+*identical jitted HLO* here, because XLA CSEs the recompute — the policy
+distinction is observable only at the VM/kernel level (see DESIGN.md).
+
+Termination is on-the-fly (paper Challenge 1): a ``lax.while_loop`` whose
+predicate reads the scalar ``rr`` produced *inside* the loop body — one
+compiled program serves any matrix and any iteration count.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.precision import PrecisionScheme
+
+__all__ = ["CGState", "jpcg_loop", "init_state"]
+
+
+class CGState(NamedTuple):
+    i: jax.Array          # iteration counter (int32)
+    x: jax.Array          # current solution
+    r: jax.Array          # residual
+    p: jax.Array          # search direction
+    rz: jax.Array         # (r, z)
+    rr: jax.Array         # ‖r‖² — the termination scalar
+    trace: jax.Array      # rr per iteration ((maxiter,) or (0,))
+
+
+def _dot(a: jax.Array, b: jax.Array) -> jax.Array:
+    return jnp.dot(a, b)
+
+
+def init_state(matvec, diag, b, x0, *, maxiter: int,
+               scheme: PrecisionScheme, with_trace: bool) -> CGState:
+    """Paper Alg. 1 lines 1–5 (the controller's rp = −1 warm-up pass)."""
+    vd = scheme.vector_dtype
+    b = b.astype(vd)
+    x0 = x0.astype(vd)
+    r = b - matvec(x0)
+    z = r / diag
+    p = z
+    rz = _dot(r, z)
+    rr = _dot(r, r)
+    trace = jnp.zeros(maxiter if with_trace else 0, dtype=vd)
+    return CGState(i=jnp.zeros((), jnp.int32), x=x0, r=r, p=p, rz=rz, rr=rr,
+                   trace=trace)
+
+
+def jpcg_loop(matvec, diag, state: CGState, *, tol: float, maxiter: int,
+              scheme: PrecisionScheme, phase_ops=None) -> CGState:
+    """Run Alg. 1's main loop until ``rr <= tol`` or ``i == maxiter``.
+
+    ``phase_ops`` — optional ``(dot, phase2, phase3)`` triple (see
+    :func:`repro.kernels.ops.make_phase_ops`): when given, each phase runs
+    as one fused Pallas kernel instead of the jnp expressions below (which
+    XLA fuses to the same dataflow — the jnp path IS the oracle).
+    """
+    vd = scheme.vector_dtype
+    tol = jnp.asarray(tol, dtype=vd)
+
+    def cond(s: CGState) -> jax.Array:
+        return (s.i < maxiter) & (s.rr > tol)
+
+    def body_jnp(s: CGState) -> CGState:
+        # ---- Phase 1: M1 (SpMV), M2 (dot) -> alpha ----
+        ap = matvec(s.p)
+        pap = _dot(s.p, ap)
+        alpha = s.rz / pap
+        # ---- Phase 2: M4, M8, M5, M6 -> beta ----
+        r_new = s.r - alpha * ap
+        rr_new = _dot(r_new, r_new)          # M8 hoisted: early termination
+        z = r_new / diag                     # M5 (never stored)
+        rz_new = _dot(r_new, z)              # M6
+        beta = rz_new / s.rz
+        # ---- Phase 3: M7, M3 ----
+        p_new = z + beta * s.p
+        x_new = s.x + alpha * s.p
+        trace = s.trace.at[s.i].set(rr_new) if s.trace.shape[0] else s.trace
+        return CGState(i=s.i + 1, x=x_new, r=r_new, p=p_new, rz=rz_new,
+                       rr=rr_new, trace=trace)
+
+    def body_kernels(s: CGState) -> CGState:
+        dot, phase2, phase3 = phase_ops
+        # ---- Phase 1: SpMV kernel + dot kernel -> alpha ----
+        ap = matvec(s.p)
+        pap = dot(s.p, ap)
+        alpha = s.rz / pap
+        # ---- Phase 2: ONE fused kernel (M4+M8+M5+M6) -> beta ----
+        r_new, scal = phase2(alpha, s.r, ap, diag)
+        rr_new, rz_new = scal[0], scal[1]
+        beta = rz_new / s.rz
+        # ---- Phase 3: ONE fused kernel (M5-recompute+M7+M3) ----
+        p_new, x_new = phase3(alpha, beta, r_new, diag, s.p, s.x)
+        trace = s.trace.at[s.i].set(rr_new) if s.trace.shape[0] else s.trace
+        return CGState(i=s.i + 1, x=x_new, r=r_new, p=p_new, rz=rz_new,
+                       rr=rr_new, trace=trace)
+
+    body = body_jnp if phase_ops is None else body_kernels
+    return jax.lax.while_loop(cond, body, state)

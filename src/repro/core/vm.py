@@ -1,0 +1,166 @@
+"""Stream VM — executes stream-centric ISA programs (paper §3–§4).
+
+The VM models Callipepla's top architecture (paper Fig. 1):
+
+* **memory** — a bank of named HBM vector buffers (x, r, p, ap, M, b);
+* **queues** — the inter-module FIFOs; since our "streaming" happens inside
+  fused XLA regions, a queue register holds one logical vector in flight
+  (fan-out is free, like the paper's VecCtrl element duplication);
+* **computation modules** M1–M8 dispatched by ``lax.switch`` — M1 is the
+  mixed-precision SpMV, M2/M6/M8 the dot modules, M3/M4/M7 the axpy
+  family, M5 the Jacobi left-divide;
+* **global controller** — an outer ``lax.while_loop`` that runs the
+  program once per iteration, updates the scalar registers (α, β, rz, rr)
+  via CTRL instructions, and terminates on the fly when ``rr ≤ τ``
+  (paper Challenge 1).
+
+The program is a *traced operand*: one compiled VM executes any program of
+the ISA (paper-policy, min-traffic, or anything else assembled from the
+module vocabulary) with **no retrace** — the JAX analogue of not re-running
+synthesis/place/route per problem.  ``tests/test_vm.py`` asserts bit-level
+agreement with the production solver and that NOP-padded program variants
+share one executable.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.isa import (ITYPE_COMP, ITYPE_CTRL, ITYPE_NOP, ITYPE_VCTRL,
+                            BUF, SREG)
+from repro.core.operators import as_operator
+from repro.core.precision import get_scheme
+
+__all__ = ["VMState", "vm_solve"]
+
+_N_QUEUES = 8
+_N_SREGS = 6
+
+
+class VMState(NamedTuple):
+    mem: jax.Array       # [6, n] HBM vector buffers
+    queues: jax.Array    # [8, n] inter-module streams
+    sregs: jax.Array     # [6]    scalar registers (alpha, beta, rz, rr, pap, rz')
+    i: jax.Array         # iteration counter
+
+
+def _make_executor(op, vd):
+    """Build the per-instruction executor closed over the SpMV operator."""
+
+    def exec_vctrl(w, st: VMState) -> VMState:
+        buf, rd, wr, qa, qd = w[1], w[2], w[3], w[4], w[6]
+        # rd: queue[qd] <- mem[buf] ; wr: mem[buf] <- queue[qa]
+        q = jax.lax.cond(
+            rd == 1,
+            lambda: st.queues.at[qd].set(st.mem[buf]),
+            lambda: st.queues)
+        m = jax.lax.cond(
+            wr == 1,
+            lambda: st.mem.at[buf].set(st.queues[qa]),
+            lambda: st.mem)
+        return st._replace(mem=m, queues=q)
+
+    def exec_comp(w, st: VMState) -> VMState:
+        mod, neg, qa, qb, qd, sr = w[1], w[2], w[4], w[5], w[6], w[7]
+        a = st.queues[qa]
+        bq = st.queues[qb]
+        s = st.sregs[sr]
+        s = jnp.where(neg == 1, -s, s)
+
+        def spmv():      # M1
+            return st.queues.at[qd].set(op.matvec(a)), st.sregs
+
+        def dot():       # M2 / M6 / M8 -> scalar register
+            return st.queues, st.sregs.at[sr].set(jnp.dot(a, bq))
+
+        def axpy():      # M3 / M4 / M7: dst = a + s·b
+            return st.queues.at[qd].set(a + s * bq), st.sregs
+
+        def div():       # M5: dst = a / b  (Jacobi left-divide)
+            return st.queues.at[qd].set(a / bq), st.sregs
+
+        branch = jnp.array([0, 1, 2, 2, 3, 1, 2, 1], jnp.int32)[mod]
+        q, sregs = jax.lax.switch(branch, [spmv, dot, axpy, div])
+        return st._replace(queues=q, sregs=sregs)
+
+    def exec_ctrl(w, st: VMState) -> VMState:
+        def alpha():     # α = rz / pap
+            return st.sregs.at[SREG["alpha"]].set(
+                st.sregs[SREG["rz"]] / st.sregs[SREG["pap"]])
+
+        def beta():      # β = rz' / rz ; rz ← rz'
+            s = st.sregs.at[SREG["beta"]].set(
+                st.sregs[SREG["rz_new"]] / st.sregs[SREG["rz"]])
+            return s.at[SREG["rz"]].set(st.sregs[SREG["rz_new"]])
+
+        return st._replace(sregs=jax.lax.switch(w[1], [alpha, beta]))
+
+    def exec_nop(w, st: VMState) -> VMState:
+        return st
+
+    def execute(w, st: VMState) -> VMState:
+        return jax.lax.switch(
+            w[0], [lambda: exec_vctrl(w, st), lambda: exec_comp(w, st),
+                   lambda: exec_ctrl(w, st), lambda: exec_nop(w, st)])
+
+    return execute
+
+
+@partial(jax.jit, static_argnames=("tol", "maxiter", "scheme_name"))
+def _vm_run(program, op, mem0, sregs0, *, tol, maxiter, scheme_name):
+    scheme = get_scheme(scheme_name)
+    vd = scheme.vector_dtype
+    n = mem0.shape[1]
+    execute = _make_executor(op, vd)
+    st0 = VMState(mem=mem0, queues=jnp.zeros((_N_QUEUES, n), vd),
+                  sregs=sregs0, i=jnp.zeros((), jnp.int32))
+
+    def run_program(st: VMState) -> VMState:
+        def step(pc, s):
+            return execute(program[pc], s)
+        return jax.lax.fori_loop(0, program.shape[0], step, st)
+
+    def cond(st: VMState):
+        return (st.i < maxiter) & (st.sregs[SREG["rr"]] > tol)
+
+    def body(st: VMState):
+        st = run_program(st)
+        return st._replace(i=st.i + 1)
+
+    return jax.lax.while_loop(cond, body, st0)
+
+
+def vm_solve(a, b=None, x0=None, *, program: np.ndarray, tol: float = 1e-12,
+             maxiter: int = 20_000, scheme="mixed_v3", diag=None,
+             block_rows: int = 256, col_tile: int = 512):
+    """Solve Ax=b by executing ``program`` on the stream VM."""
+    scheme = get_scheme(scheme)
+    vd = scheme.vector_dtype
+    op = as_operator(a, scheme, diag=diag, block_rows=block_rows,
+                     col_tile=col_tile)
+    n = op.n
+    b = (jnp.ones(n, vd) if b is None else jnp.asarray(b)).astype(vd)
+    x0 = (jnp.zeros(n, vd) if x0 is None else jnp.asarray(x0)).astype(vd)
+    d = jnp.asarray(op.diag).astype(vd)
+
+    # Controller warm-up (paper merges Alg.1 lines 1–5 into the loop via the
+    # rp = −1 pass; we run them directly, like the production solver).
+    r0 = b - op.matvec(x0)
+    z0 = r0 / d
+    mem0 = jnp.stack([x0, r0, z0, jnp.zeros_like(r0), d, b])  # x r p ap M b
+    sregs0 = jnp.zeros(_N_SREGS, vd)
+    sregs0 = sregs0.at[SREG["rz"]].set(jnp.dot(r0, z0))
+    sregs0 = sregs0.at[SREG["rr"]].set(jnp.dot(r0, r0))
+
+    st = _vm_run(jnp.asarray(program), op, mem0, sregs0, tol=tol,
+                 maxiter=maxiter, scheme_name=scheme.name)
+    return {
+        "x": st.mem[BUF["x"]],
+        "iterations": int(st.i),
+        "rr": float(st.sregs[SREG["rr"]]),
+        "converged": bool(st.sregs[SREG["rr"]] <= tol),
+    }

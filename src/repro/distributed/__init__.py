@@ -1,0 +1,12 @@
+"""Distribution layer: sharding rules (FSDP×TP×EP×DP), activation hints,
+distributed CG."""
+from repro.distributed import hints
+from repro.distributed.cg_dist import DistCG, make_dist_solver
+from repro.distributed.hints import DATA, MODEL, hint, sharding_hints
+from repro.distributed.sharding import (activation_spec, batch_specs,
+                                        cache_specs, data_axes,
+                                        named_shardings, param_specs)
+
+__all__ = ["DistCG", "make_dist_solver", "param_specs", "batch_specs",
+           "cache_specs", "data_axes", "named_shardings", "activation_spec",
+           "hints", "hint", "sharding_hints", "DATA", "MODEL"]

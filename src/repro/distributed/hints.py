@@ -1,0 +1,73 @@
+"""Activation sharding hints — mesh-context for model-internal constraints.
+
+The models are mesh-agnostic; launchers activate a mesh context and the
+layers drop `hint(x, DATA, None, MODEL, None)` constraints at the few
+points where GSPMD's propagation otherwise picks a catastrophic layout
+(observed: sharding the *head_dim* contraction of attention, which turns
+every layer's score matrix into a 5.5 GB all-reduce — see EXPERIMENTS.md
+§Perf).  Without an active context every hint is a no-op, so tests and
+single-device runs never pay for it.
+
+``DATA`` resolves to ("pod", "data") ∩ mesh axes; ``MODEL`` to "model".
+Axis entries that don't exist in the mesh are dropped; uneven dims are
+allowed (GSPMD pads internal shardings — e.g. 40 heads on 16 shards).
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+__all__ = ["DATA", "MODEL", "sharding_hints", "hint", "active_mesh"]
+
+
+class _Axis:
+    def __init__(self, name):
+        self.name = name
+
+    def __repr__(self):
+        return f"<{self.name}>"
+
+
+DATA = _Axis("DATA")
+MODEL = _Axis("MODEL")
+
+_state = threading.local()
+
+
+def active_mesh() -> Optional[Mesh]:
+    return getattr(_state, "mesh", None)
+
+
+@contextlib.contextmanager
+def sharding_hints(mesh: Optional[Mesh]):
+    prev = getattr(_state, "mesh", None)
+    _state.mesh = mesh
+    try:
+        yield
+    finally:
+        _state.mesh = prev
+
+
+def _resolve(entry, mesh: Mesh):
+    if entry is DATA:
+        axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+        return axes if axes else None
+    if entry is MODEL:
+        return "model" if "model" in mesh.axis_names else None
+    return entry
+
+
+def hint(x: jax.Array, *spec) -> jax.Array:
+    """Constrain ``x`` to ``spec`` under the active mesh (no-op without)."""
+    mesh = active_mesh()
+    if mesh is None:
+        return x
+    resolved = tuple(_resolve(e, mesh) for e in spec)
+    if all(e is None for e in resolved):
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*resolved)))

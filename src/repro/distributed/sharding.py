@@ -1,0 +1,181 @@
+"""Sharding rules — FSDP(data) × TP(model) × EP(experts→model) × DP(pod).
+
+One rule engine covers every assigned architecture.  Conventions:
+
+* **TP (model axis)**: attention/ssm projection *output* features, MLP
+  hidden ``d_ff``, MoE expert axis, vocab dim of the embedding.
+* **FSDP (data axis)**: the projection *input* dim (ZeRO-3 style — with
+  scan-over-layers GSPMD all-gathers one layer's weights at a time).
+* **DP (pod axis)**: batch only.  The pod axis is DCN-attached; placing
+  only the gradient all-reduce and CG dot reductions there keeps
+  layer-wise collectives intra-pod (DESIGN.md §5).
+* Uneven dims (whisper's 51 865 vocab, 40 heads on 16-way TP) rely on
+  GSPMD's implicit padding — legal and compile-verified by the dry-run.
+
+Rules are *name- and rank-based* over the param tree paths that
+``repro.models`` produces; anything unmatched replicates (norms, scalars).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+__all__ = ["param_specs", "batch_specs", "cache_specs", "data_axes",
+           "named_shardings", "activation_spec"]
+
+
+def data_axes(mesh: Mesh) -> Tuple[str, ...]:
+    """Batch-parallel axes: ('pod', 'data') on multi-pod, ('data',) else."""
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def _path_names(path) -> Tuple[str, ...]:
+    out = []
+    for p in path:
+        if hasattr(p, "key"):
+            out.append(str(p.key))
+        elif hasattr(p, "name"):
+            out.append(str(p.name))
+    return tuple(out)
+
+
+def _rule(names: Tuple[str, ...], ndim: int) -> P:
+    js = "/".join(names)
+    leaf = names[-1] if names else ""
+
+    # ---- embeddings: vocab on model (biggest single tensor) ----
+    if "embed" in js:
+        return P("model", None)
+
+    # ---- MoE expert-stacked weights [L, E, D, F] / [L, E, F, D] ----
+    if ndim == 4:
+        if leaf == "wo":
+            return P(None, "model", None, "data")
+        return P(None, "model", "data", None)    # wi / wg
+    if "router" in js:
+        return P(None, None, None) if ndim == 3 else P(None, None)
+
+    # ---- projection kernels ----
+    in_proj = ("wq", "wk", "wv", "wi", "wg", "in_proj")
+    out_proj = ("wo", "out_proj")
+    parent = names[-2] if len(names) >= 2 else ""
+    if leaf == "w" and parent in in_proj:
+        return P(None, "data", "model") if ndim == 3 else P("data", "model")
+    if leaf == "w" and parent in out_proj:
+        return P(None, "model", "data") if ndim == 3 else P("model", "data")
+    if leaf == "b" and parent in in_proj + out_proj:
+        return P(None, "model") if ndim == 2 else P("model")
+
+    # ---- SSM extras ----
+    if leaf == "conv_w":
+        return P(None, None, "model") if ndim == 3 else P(None, "model")
+    if leaf == "conv_b":
+        return P(None, "model") if ndim == 2 else P("model")
+    if leaf in ("A_log", "D", "dt_bias"):
+        return P(None, "model") if ndim == 2 else P("model")
+
+    # ---- norms / everything else: replicated ----
+    return P(*([None] * ndim))
+
+
+def _fit(spec: P, shape, mesh: Optional[Mesh]) -> P:
+    """Drop spec axes whose mesh-axis product does not divide the dim —
+    explicit jit in/out shardings (unlike internal constraints) require
+    exact divisibility, so e.g. whisper's 51 865 vocab replicates."""
+    if mesh is None:
+        return spec
+    out = []
+    for dim, entry in zip(shape, spec):
+        if entry is None:
+            out.append(None)
+            continue
+        axes = entry if isinstance(entry, tuple) else (entry,)
+        size = 1
+        for a in axes:
+            size *= mesh.shape[a]
+        out.append(entry if dim % size == 0 else None)
+    return P(*out)
+
+
+def param_specs(params_or_shapes, mesh: Optional[Mesh] = None):
+    """PartitionSpec pytree mirroring a params pytree (arrays or
+    ShapeDtypeStructs).  With ``mesh``, specs are divisibility-fitted."""
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: _fit(
+            _rule(_path_names(path), len(leaf.shape)), leaf.shape, mesh),
+        params_or_shapes)
+
+
+def batch_specs(batch, mesh: Mesh):
+    """Specs for a train/prefill batch dict: batch dim over (pod, data)."""
+    dp = data_axes(mesh)
+
+    def spec(path, leaf):
+        nd = len(leaf.shape)
+        if nd == 0:
+            return P()
+        return _fit(P(dp, *([None] * (nd - 1))), leaf.shape, mesh)
+
+    return jax.tree_util.tree_map_with_path(spec, batch)
+
+
+def cache_specs(cache, mesh: Mesh, *, batch: int):
+    """Decode-cache specs.
+
+    batch ≥ |data|  → batch on data, cache length on model;
+    batch 1 (long_500k) → cache length over (data × model), heads/channels
+    on model where present.
+    """
+    dp = data_axes(mesh)
+    dsize = 1
+    for a in data_axes(mesh):
+        dsize *= mesh.shape[a]
+    msize = mesh.shape.get("model", 1)
+    big_batch = batch % dsize == 0 and batch >= dsize
+
+    def spec(path, leaf):
+        names = _path_names(path)
+        nd = len(leaf.shape)
+        if nd == 5 and "ssm" in names:   # SSD state [L, B, H, P, N]
+            h_ok = leaf.shape[2] % msize == 0
+            return P(None, dp if big_batch else None,
+                     "model" if h_ok else None, None, None)
+        if nd == 5 and "cross" in names:  # enc-dec cross KV [L, B, T, H, D]
+            return P(None, dp if big_batch else None, None, None, None)
+        if nd == 5:                      # stacked KV, head-major:
+            if big_batch:                # [L, B, H, S, D]
+                seq_ok = leaf.shape[3] % msize == 0
+                return P(None, dp, None, "model" if seq_ok else None, None)
+            seq_ok = leaf.shape[3] % (dsize * msize) == 0
+            return P(None, None, None,
+                     ("data", "model") if seq_ok else None, None)
+        if nd == 4:                      # conv taps [L, B, K-1, C]
+            c_ok = leaf.shape[3] % msize == 0
+            return P(None, dp if big_batch else None, None,
+                     "model" if c_ok else None)
+        return P(*([None] * nd))
+
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: _fit(spec(path, leaf), leaf.shape, mesh), cache)
+
+
+def activation_spec(mesh: Mesh, seq_len: int, *,
+                    seq_parallel_above: int = 8192) -> P:
+    """Block-boundary activation constraint [B, S, D].
+
+    Long sequences shard S on the model axis between blocks (sequence
+    parallelism); short sequences keep S replicated (pure TP inside).
+    """
+    dp = data_axes(mesh)
+    msize = mesh.shape.get("model", 1)
+    if seq_len >= seq_parallel_above and seq_len % msize == 0:
+        return P(dp, "model", None)
+    return P(dp, None, None)
+
+
+def named_shardings(specs, mesh: Mesh):
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), specs,
+        is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,17 @@
+"""Pallas TPU kernels (validated interpret=True on CPU).
+
+* :mod:`repro.kernels.spmv`        — banked-ELLPACK mixed-precision SpMV (M1);
+* :mod:`repro.kernels.dot`         — two-phase lane-parallel dot / fused dot3;
+* :mod:`repro.kernels.fused_phase` — the VSR phase-2/phase-3 fused kernels;
+* :mod:`repro.kernels.flash_attn`  — online-softmax attention (the §Perf
+  "next lever" for the memory-bound train/prefill cells: scores stay in
+  VMEM — VSR applied to attention);
+* :mod:`repro.kernels.ops`         — jitted wrappers (`backend="pallas"`);
+* :mod:`repro.kernels.ref`         — pure-jnp oracles for every kernel.
+"""
+from repro.kernels.flash_attn import flash_attention
+from repro.kernels.ops import (bell_operator_pallas, ell_operator_pallas,
+                               make_phase_ops, PallasEllOperator)
+
+__all__ = ["bell_operator_pallas", "ell_operator_pallas", "make_phase_ops",
+           "PallasEllOperator", "flash_attention"]

@@ -1,0 +1,92 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Each function mirrors the corresponding kernel's *dataflow* (same
+accumulation order and the same precision-scheme casts) so that
+``assert_allclose(kernel, ref)`` sweeps in ``tests/test_kernels.py`` are
+meaningful at tight tolerances.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.precision import PrecisionScheme
+
+__all__ = ["spmv_ref", "dot_ref", "dot3_ref", "phase2_ref", "phase3_ref"]
+
+
+def spmv_ref(tile_cols: jax.Array, vals: jax.Array, local_cols: jax.Array,
+             x_tiles: jax.Array, *, scheme: PrecisionScheme) -> jax.Array:
+    """ELLPACK SpMV oracle.
+
+    tile_cols int32[B, T]; vals md[B, T, E, R]; local_cols int32[B, T, E, R];
+    x_tiles [n_col_tiles, C] at spmv_in_dtype.  Returns acc_dtype[B, R].
+    """
+    acc = scheme.spmv_acc_dtype
+    B, T, E, R = vals.shape
+    x_in = x_tiles.astype(scheme.spmv_in_dtype)
+    xt = x_in[tile_cols]                               # [B, T, C]
+    xg = jnp.take_along_axis(
+        xt[:, :, None, :].astype(acc),
+        local_cols.astype(jnp.int32),
+        axis=-1) if False else jnp.take_along_axis(
+        jnp.broadcast_to(xt[:, :, None, :], (B, T, E, xt.shape[-1])),
+        local_cols, axis=-1)                           # [B, T, E, R]
+    prod = vals.astype(acc) * xg.astype(acc)
+    return jnp.sum(prod, axis=(1, 2)).astype(acc)      # [B, R]
+
+
+def dot_ref(a: jax.Array, b: jax.Array, acc_dtype=jnp.float32) -> jax.Array:
+    """Dot oracle: sum(a*b) at acc_dtype (kernel accumulation order is
+    blockwise; fp addition reassociation is covered by test tolerances)."""
+    return jnp.sum(a.astype(acc_dtype) * b.astype(acc_dtype))
+
+
+def dot3_ref(r: jax.Array, u: jax.Array, w: jax.Array,
+             acc_dtype=jnp.float32) -> jax.Array:
+    """Fused triple-dot oracle: [r·u, w·u, r·r] in one pass (pipelined CG)."""
+    r = r.astype(acc_dtype)
+    u = u.astype(acc_dtype)
+    w = w.astype(acc_dtype)
+    return jnp.stack([jnp.sum(r * u), jnp.sum(w * u), jnp.sum(r * r)])
+
+
+def phase2_ref(alpha: jax.Array, r: jax.Array, ap: jax.Array,
+               diag: jax.Array):
+    """Phase-2 VSR oracle: r' = r − α·ap; rr = r'·r'; z = r'/M (never
+    stored); rz = r'·z.  Returns (r_new, jnp.stack([rr, rz]))."""
+    r_new = r - alpha * ap
+    z = r_new / diag
+    rr = jnp.sum(r_new * r_new)
+    rz = jnp.sum(r_new * z)
+    return r_new, jnp.stack([rr, rz])
+
+
+def phase3_ref(alpha: jax.Array, beta: jax.Array, r_new: jax.Array,
+               diag: jax.Array, p: jax.Array, x: jax.Array):
+    """Phase-3 VSR oracle: z = r'/M recomputed (§5.3), p' = z + β·p,
+    x' = x + α·p.  Returns (p_new, x_new)."""
+    z = r_new / diag
+    p_new = z + beta * p
+    x_new = x + alpha * p
+    return p_new, x_new
+
+
+def mha_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+            causal: bool = True, window=None) -> jax.Array:
+    """Flash-attention oracle: plain masked softmax attention, head-major
+    [BH, S, D] inputs, fp32 softmax."""
+    s, t = q.shape[1], k.shape[1]
+    scores = jnp.einsum("bsd,btd->bst", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * (q.shape[-1] ** -0.5)
+    i = jnp.arange(s)[:, None]
+    j = jnp.arange(t)[None, :]
+    mask = jnp.ones((s, t), bool)
+    if causal:
+        mask &= j <= i
+    if window is not None:
+        mask &= j > i - window
+    scores = jnp.where(mask[None], scores, -1e30)
+    w = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("bst,btd->bsd", w,
+                      v.astype(jnp.float32)).astype(q.dtype)

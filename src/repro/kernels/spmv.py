@@ -1,0 +1,98 @@
+"""Mixed-precision banked-ELLPACK SpMV — the M1 module as a Pallas kernel.
+
+TPU adaptation of the paper's Serpens-based SpMV (§6, Fig. 8):
+
+  ==============================  =========================================
+  Callipepla (U280)               this kernel (TPU v5e)
+  ==============================  =========================================
+  16 HBM channels × 8 PEs         grid dimension 0 over row blocks
+                                  (``dimension_semantics="parallel"``)
+  BRAM X-memory (4K deep)         x col-tile resident in VMEM; fetched by
+                                  the BlockSpec ``index_map`` driven by the
+                                  scalar-prefetched ``tile_cols`` stream —
+                                  the Type-III memory-instruction analogue
+  URAM Y-memory (24K deep)        y row-block accumulator in VMEM, revision
+                                  over grid dim 1 (slabs), written once
+  64-bit packed nonzero           slot-major ELLPACK entry: value at
+  (14b col, 18b row, fp32 val)    ``matrix_dtype`` + int16-capable *local*
+                                  col index; the row is the lane id
+  FP32→FP64 cast + FMA            ``vals.astype(acc) * x.astype(acc)`` —
+                                  the Mix-V3 cast happens in-register
+  ==============================  =========================================
+
+VMEM budget per grid step (defaults R=256, C=512, E≤32, fp32):
+x tile 2 KB + vals/lcols 2·E·R·4 B ≤ 256 KB + y 1 KB — far under the 16 MB
+v5e VMEM even with double buffering; block shapes are lane(128)/sublane(8)
+aligned.
+
+The gather ``x_tile[local_cols]`` is a dynamic VMEM gather (Mosaic
+``DynamicGatherOp``); on CPU we validate under ``interpret=True``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.precision import PrecisionScheme
+
+__all__ = ["spmv_pallas"]
+
+
+def _spmv_kernel(tile_cols_ref, vals_ref, lcols_ref, x_ref, y_ref, *,
+                 acc_dtype):
+    """One (row-block i, slab t) grid step: y[i] += Σ_e vals[i,t,e,:] ⊙
+    x_tile[lcols[i,t,e,:]]."""
+    t = pl.program_id(1)
+
+    @pl.when(t == 0)
+    def _init():
+        y_ref[...] = jnp.zeros_like(y_ref)
+
+    x_tile = x_ref[0]                       # [C] spmv_in_dtype
+    vals = vals_ref[0, 0]                   # [E, R] matrix_dtype
+    lcols = lcols_ref[0, 0]                 # [E, R] int32
+    xg = jnp.take(x_tile, lcols.reshape(-1), axis=0,
+                  indices_are_sorted=False, unique_indices=False,
+                  mode="clip").reshape(vals.shape)
+    prod = vals.astype(acc_dtype) * xg.astype(acc_dtype)
+    y_ref[...] += jnp.sum(prod, axis=0)[None, :]
+
+
+@functools.partial(jax.jit, static_argnames=("scheme", "interpret"))
+def spmv_pallas(tile_cols: jax.Array, vals: jax.Array, local_cols: jax.Array,
+                x_tiles: jax.Array, *, scheme: PrecisionScheme,
+                interpret: bool = False) -> jax.Array:
+    """Banked-ELLPACK SpMV.
+
+    tile_cols int32[B, T] — scalar-prefetched memory-instruction stream;
+    vals scheme.matrix_dtype[B, T, E, R]; local_cols int32[B, T, E, R];
+    x_tiles [n_col_tiles, C] (cast to ``scheme.spmv_in_dtype`` here — the
+    Mix-V1/V2 information loss point).  Returns acc_dtype[B, R].
+    """
+    B, T, E, R = vals.shape
+    C = x_tiles.shape[-1]
+    acc = scheme.spmv_acc_dtype
+    x_in = x_tiles.astype(scheme.spmv_in_dtype)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(B, T),
+        in_specs=[
+            pl.BlockSpec((1, 1, E, R), lambda i, t, tc: (i, t, 0, 0)),
+            pl.BlockSpec((1, 1, E, R), lambda i, t, tc: (i, t, 0, 0)),
+            pl.BlockSpec((1, C), lambda i, t, tc: (tc[i, t], 0)),
+        ],
+        out_specs=pl.BlockSpec((1, R), lambda i, t, tc: (i, 0)),
+    )
+    return pl.pallas_call(
+        functools.partial(_spmv_kernel, acc_dtype=acc),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, R), acc),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")),
+        interpret=interpret,
+    )(tile_cols, vals, local_cols, x_in)

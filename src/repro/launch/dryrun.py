@@ -1,0 +1,310 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run — proves the distribution config is coherent.
+
+For every (architecture × input shape) cell, on the single-pod (16×16)
+and multi-pod (2×16×16) production meshes::
+
+    lowered  = jax.jit(step, in_shardings=…, out_shardings=…).lower(**specs)
+    compiled = lowered.compile()
+    compiled.memory_analysis()    # proves it fits
+    compiled.cost_analysis()      # FLOPs/bytes for §Roofline
+
+plus the collective-byte parse of the partitioned HLO.  Results land as
+JSON artifacts under ``experiments/dryrun/<mesh>/`` which
+``benchmarks``/EXPERIMENTS.md consume.
+
+Usage::
+
+    python -m repro.launch.dryrun --arch qwen2.5-32b --shape train_4k
+    python -m repro.launch.dryrun --all --mesh single
+    python -m repro.launch.dryrun --all --mesh multi
+"""
+import argparse
+import json
+import sys
+import time
+import traceback
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import SHAPES, applicable, cells, get_config, input_specs
+from repro.distributed.hints import sharding_hints
+from repro.distributed.sharding import (batch_specs, cache_specs,
+                                        named_shardings, param_specs)
+from repro.launch.mesh import make_production_mesh
+from repro.models.api import decode_step, forward_logits, init_params, loss_fn
+from repro.roofline.hlo_cost import walk_hlo
+from repro.roofline.model import (V5E, model_flops_decode, model_flops_train,
+                                  roofline_terms)
+from repro.train.optim import AdamWConfig, adamw_init, adamw_update
+
+ART_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                       "experiments", "dryrun")
+
+#: grad-accumulation microbatches for the train shape (memory feasibility:
+#: 1 sequence / device / microbatch at global_batch=256 on a 16×16 mesh).
+TRAIN_MICROBATCHES = 16
+
+#: §Perf hillclimb switches (comma-separated in REPRO_DRYRUN_OPTS):
+#:   bf16_gather — cast ≥2-D params to bf16 ONCE per step before the
+#:                 microbatch scan: FSDP all-gathers and weight reads move
+#:                 half the bytes (Mix-V3's "stream the operator low, keep
+#:                 the iterate high" applied to training weights);
+#:   ssd_chunk64 / ssd_chunk128 — SSD chunk length override (the
+#:                 chunk-quadratic intra term scales ~linearly with q).
+OPTS = frozenset(o for o in os.environ.get(
+    "REPRO_DRYRUN_OPTS", "").split(",") if o)
+
+
+def _params_shape(cfg):
+    key = jax.ShapeDtypeStruct((2,), jnp.uint32)
+    return jax.eval_shape(lambda k: init_params(cfg, k), key)
+
+
+def _opt_shape(params_shape, opt):
+    return jax.eval_shape(partial(adamw_init, cfg=opt), params_shape)
+
+
+def build_cell(arch: str, shape_name: str, mesh):
+    """(fn, example_args, in_shardings, out_shardings, donate) per cell."""
+    cfg = get_config(arch)
+    if cfg.ssm is not None:
+        import dataclasses as _dc
+        if "ssd_chunk64" in OPTS:
+            cfg = _dc.replace(cfg, ssm=_dc.replace(cfg.ssm, chunk=64))
+        elif "ssd_chunk128" in OPTS:
+            cfg = _dc.replace(cfg, ssm=_dc.replace(cfg.ssm, chunk=128))
+    shape = SHAPES[shape_name]
+    specs = input_specs(arch, shape_name)
+    pshape = _params_shape(cfg)
+    pspecs = param_specs(pshape, mesh)
+    p_sh = named_shardings(pspecs, mesh)
+    rep = NamedSharding(mesh, P())
+
+    if shape.kind == "train":
+        opt = AdamWConfig()
+        oshape = _opt_shape(pshape, opt)
+        o_sh = type(oshape)(step=rep, m=named_shardings(pspecs, mesh),
+                            v=named_shardings(pspecs, mesh))
+        b_sh = named_shardings(batch_specs(specs, mesh), mesh)
+        mb = TRAIN_MICROBATCHES
+
+        from repro.distributed.sharding import data_axes
+        dp = data_axes(mesh)
+
+        def train_step(params, opt_state, batch, step):
+            def split(x):
+                # strided split: each microbatch spans ALL data shards
+                # (a contiguous reshape would put a whole microbatch on
+                # one shard and serialize the accumulation)
+                y = x.reshape(x.shape[0] // mb, mb,
+                              *x.shape[1:]).swapaxes(0, 1)
+                return jax.lax.with_sharding_constraint(
+                    y, NamedSharding(
+                        mesh, P(None, dp, *([None] * (x.ndim - 1)))))
+            micros = jax.tree_util.tree_map(split, batch)
+
+            if "bf16_gather" in OPTS:
+                # Cast params to bf16 *while still FSDP-sharded* (the
+                # sharding constraint pins the convert before the gather —
+                # without it XLA gathers fp32 and converts after): every
+                # FSDP all-gather and weight read in the microbatch scan
+                # moves half the bytes.  Grads flow w.r.t. the bf16 view;
+                # fp32 masters update in adamw (Mix-V3's "stream the
+                # operator low, keep the iterate high" applied to weights).
+                fwd_params = jax.tree_util.tree_map(
+                    lambda p, sh: jax.lax.with_sharding_constraint(
+                        p.astype(jnp.bfloat16), sh)
+                    if p.ndim >= 2 and p.dtype == jnp.float32 else p,
+                    params, p_sh)
+                # barrier pins convert-before-gather (XLA otherwise hoists
+                # the convert past the FSDP all-gather, moving f32)
+                fwd_params = jax.lax.optimization_barrier(fwd_params)
+            else:
+                fwd_params = params
+
+            def accum(carry, micro):
+                l, g = jax.value_and_grad(
+                    lambda p: loss_fn(p, cfg, micro))(fwd_params)
+                g = jax.tree_util.tree_map(
+                    lambda a, z: a.astype(z.dtype), g, carry[1])
+                return (carry[0] + l,
+                        jax.tree_util.tree_map(jnp.add, carry[1], g)), None
+
+            zero = jax.tree_util.tree_map(
+                lambda p, sh: jax.lax.with_sharding_constraint(
+                    jnp.zeros(p.shape, jnp.float32), sh), params, p_sh)
+            (loss, grads), _ = jax.lax.scan(
+                accum, (jnp.zeros((), jnp.float32), zero), micros)
+            grads = jax.tree_util.tree_map(lambda g: g / mb, grads)
+            new_p, new_o = adamw_update(grads, opt_state, params, opt,
+                                        lr=jnp.asarray(3e-4, jnp.float32))
+            return new_p, new_o, loss / mb
+
+        args = (pshape, oshape, specs, jax.ShapeDtypeStruct((), jnp.int32))
+        in_sh = (p_sh, o_sh, b_sh, rep)
+        out_sh = (p_sh, o_sh, rep)
+        # donate params+opt: in-place update (ping-pong aliasing)
+        return train_step, args, in_sh, out_sh, (0, 1)
+
+    if shape.kind == "prefill":
+        b_sh = named_shardings(batch_specs(specs, mesh), mesh)
+
+        def prefill_step(params, batch):
+            # serving prefill: only the last position's logits materialize
+            return forward_logits(params, cfg, batch, last_only=True)[:, 0]
+
+        return (prefill_step, (pshape, specs), (p_sh, b_sh),
+                NamedSharding(mesh, P(("data",), None)), ())
+
+    # decode
+    c_sh = named_shardings(
+        cache_specs(specs["cache"], mesh, batch=shape.global_batch), mesh)
+    tok_spec = (NamedSharding(mesh, P(("data",)))
+                if shape.global_batch % mesh.shape.get("data", 1) == 0
+                else rep)
+
+    def serve_step(params, cache, token, pos):
+        logits, new_cache = decode_step(params, cfg, cache, token, pos)
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32), new_cache
+
+    args = (pshape, specs["cache"], specs["token"], specs["pos"])
+    in_sh = (p_sh, c_sh, tok_spec, rep)
+    out_sh = (tok_spec, c_sh)
+    # donate the cache: the update aliases in place (double-channel
+    # ping-pong analogue; halves decode HBM footprint)
+    return serve_step, args, in_sh, out_sh, (1,)
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str,
+             save: bool = True) -> dict:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    ok, why = applicable(cfg, shape)
+    rec = {"arch": arch, "shape": shape_name, "mesh": mesh_kind}
+    if not ok:
+        rec.update(status="SKIP", reason=why)
+        return rec
+
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    chips = mesh.size
+    t0 = time.time()
+    fn, args, in_sh, out_sh, donate = build_cell(arch, shape_name, mesh)
+    with sharding_hints(mesh):          # activation hints trace-time active
+        lowered = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh,
+                          donate_argnums=donate).lower(*args)
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    xla_cost = dict(compiled.cost_analysis())
+    ma = compiled.memory_analysis()
+    mem = {
+        "argument_bytes": ma.argument_size_in_bytes,
+        "output_bytes": ma.output_size_in_bytes,
+        "temp_bytes": ma.temp_size_in_bytes,
+        "alias_bytes": ma.alias_size_in_bytes,
+        "total_bytes": (ma.argument_size_in_bytes + ma.output_size_in_bytes
+                        + ma.temp_size_in_bytes - ma.alias_size_in_bytes),
+    }
+    hlo = compiled.as_text()
+    # Loop-multiplicity-aware walk (xla cost_analysis counts scan bodies
+    # once — useless for 64-layer models; see roofline/hlo_cost.py).
+    w = walk_hlo(hlo, default_group=chips)
+    cost = {"flops": w.flops, "bytes accessed": w.hbm_bytes,
+            "transcendentals": w.transcendentals}
+    coll = {"total_wire_bytes": w.wire_bytes,
+            "n_ops": w.collective_count, "by_kind": w.wire_by_kind}
+
+    n_active = cfg.active_param_count()
+    if shape.kind == "train":
+        mf = model_flops_train(n_active,
+                               shape.global_batch * shape.seq_len)
+    elif shape.kind == "prefill":
+        mf = 2.0 * n_active * shape.global_batch * shape.seq_len
+    else:
+        mf = model_flops_decode(n_active, shape.global_batch)
+
+    terms = roofline_terms(cost, coll["total_wire_bytes"], chips=chips,
+                           model_flops=mf)
+    rec.update(
+        status="OK",
+        kind=shape.kind,
+        chips=chips,
+        lower_s=round(t_lower, 2),
+        compile_s=round(t_compile, 2),
+        cost=cost,
+        xla_cost={k: xla_cost.get(k) for k in
+                  ("flops", "bytes accessed", "transcendentals")
+                  if k in xla_cost},
+        memory=mem,
+        fits_hbm=mem["total_bytes"] <= V5E.hbm_bytes,
+        collectives=coll,
+        roofline=terms.as_dict(),
+    )
+    if save:
+        d = os.path.join(ART_DIR, mesh_kind)
+        os.makedirs(d, exist_ok=True)
+        with open(os.path.join(d, f"{arch}__{shape_name}.json"), "w") as f:
+            json.dump(rec, f, indent=1)
+    return rec
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--mesh", choices=["single", "multi"], default="single")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--subprocess", action="store_true",
+                    help="run each cell in a fresh process (isolation)")
+    args = ap.parse_args(argv)
+
+    if args.all:
+        results = []
+        for arch, shape_name, ok, why in cells():
+            if args.subprocess and ok:
+                import subprocess
+                cmd = [sys.executable, "-m", "repro.launch.dryrun",
+                       "--arch", arch, "--shape", shape_name,
+                       "--mesh", args.mesh]
+                r = subprocess.run(cmd, capture_output=True, text=True)
+                status = "OK" if r.returncode == 0 else "FAIL"
+                print(f"{arch:24s} {shape_name:12s} {status}")
+                if r.returncode != 0:
+                    print(r.stdout[-2000:], r.stderr[-2000:])
+                continue
+            try:
+                rec = run_cell(arch, shape_name, args.mesh)
+            except Exception as e:                        # noqa: BLE001
+                rec = {"arch": arch, "shape": shape_name,
+                       "mesh": args.mesh, "status": "FAIL",
+                       "error": f"{type(e).__name__}: {e}"}
+                traceback.print_exc()
+            results.append(rec)
+            t = rec.get("roofline", {})
+            print(f"{arch:24s} {shape_name:12s} {rec['status']:4s} "
+                  f"compile={rec.get('compile_s', '-')}s "
+                  f"dom={t.get('dominant', '-')}")
+        n_fail = sum(1 for r in results if r["status"] == "FAIL")
+        print(f"\n{len(results)} cells: "
+              f"{sum(1 for r in results if r['status'] == 'OK')} OK, "
+              f"{sum(1 for r in results if r['status'] == 'SKIP')} SKIP, "
+              f"{n_fail} FAIL")
+        sys.exit(1 if n_fail else 0)
+
+    rec = run_cell(args.arch, args.shape, args.mesh)
+    print(json.dumps({k: v for k, v in rec.items() if k != "collectives"},
+                     indent=1))
+    if rec["status"] == "FAIL":
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

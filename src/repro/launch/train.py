@@ -1,0 +1,99 @@
+"""Training launcher — ``--arch <id> --optimizer adamw|cggn``.
+
+Smoke scale (CPU, reduced config) by default; ``--full`` selects the
+published config (real-cluster scale — the multi-pod dry-run validates
+those shapes compile; this driver is the same code path).
+
+Example::
+
+    PYTHONPATH=src python -m repro.launch.train --arch gemma3-1b \
+        --steps 50 --seq-len 128 --batch 8
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.models import init_params
+from repro.models.api import forward_logits
+from repro.train import (AdamWConfig, CGGNConfig, DataConfig, SyntheticLM,
+                         Trainer, TrainerConfig, adamw_init, cggn_init,
+                         cggn_update, make_train_step)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--optimizer", choices=["adamw", "cggn"],
+                    default="adamw")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--full", action="store_true",
+                    help="published config (cluster scale) instead of the "
+                         "reduced smoke config")
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_ckpt")
+    ap.add_argument("--ckpt-every", type=int, default=0)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch)
+    if not args.full:
+        cfg = cfg.reduced()
+    print(f"arch={cfg.name} family={cfg.family} "
+          f"~{cfg.param_count() / 1e6:.1f}M params")
+
+    key = jax.random.PRNGKey(args.seed)
+    params = init_params(cfg, key)
+    data = SyntheticLM(DataConfig(vocab=cfg.vocab, seq_len=args.seq_len,
+                                  global_batch=args.batch, seed=args.seed))
+
+    if args.optimizer == "adamw":
+        opt = AdamWConfig(lr=args.lr)
+        step_fn = make_train_step(cfg, opt=opt,
+                                  microbatches=args.microbatches)
+        trainer = Trainer(cfg, data, step_fn, params,
+                          adamw_init(params, opt),
+                          TrainerConfig(total_steps=args.steps,
+                                        ckpt_every=args.ckpt_every,
+                                        ckpt_dir=args.ckpt_dir))
+        log = trainer.run()
+    else:
+        ccfg = CGGNConfig(cg_iters=8, scheme="tpu_fp32", lr=1.0)
+        state = cggn_init(params, key)
+        log = []
+        for step in range(args.steps):
+            batch = data.batch_at(step)
+
+            def logits_fn(p):
+                return forward_logits(p, cfg, batch)
+
+            def loss_logits(lg):
+                lse = jax.nn.logsumexp(lg, axis=-1)
+                picked = jnp.take_along_axis(
+                    lg, batch["labels"][..., None], axis=-1)[..., 0]
+                return jnp.mean(lse - picked)
+
+            def vag(p):
+                return jax.value_and_grad(
+                    lambda q: loss_logits(logits_fn(q)))(p)
+
+            params, state, m = cggn_update(
+                params, state, loss_logits_fn=loss_logits,
+                logits_fn=logits_fn, loss_value_and_grad=vag, cfg=ccfg)
+            log.append({"step": step, "loss": float(m["loss"])})
+            if step % 5 == 0:
+                print(f"step {step:4d}  loss {float(m['loss']):.4f}  "
+                      f"|δ| {float(m['delta_norm']):.3f}")
+
+    print(f"final loss: {log[-1]['loss']:.4f}")
+    return log
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,14 @@
+"""LM model substrate — pure JAX, scan-over-layers, shard-friendly.
+
+Families: dense/GQA/SWA/local-global/MoE (:mod:`transformer`),
+SSM + hybrid (:mod:`hybrid`), encoder-decoder (:mod:`encdec`).
+Dispatch through :mod:`repro.models.api`.
+"""
+from repro.models.api import (count_params, decode_step, forward_logits,
+                              init_cache, init_params, loss_fn)
+from repro.models.config import (EncoderConfig, ModelConfig, MoEConfig,
+                                 SSMConfig)
+
+__all__ = ["init_params", "forward_logits", "loss_fn", "init_cache",
+           "decode_step", "count_params", "ModelConfig", "MoEConfig",
+           "SSMConfig", "EncoderConfig"]

@@ -1,0 +1,68 @@
+"""Family-dispatching model API — the single surface the trainer, server,
+and dry-run consume.
+
+``batch`` dicts (produced by ``configs.input_specs``):
+  * LM families:    {"tokens": [B,S] i32, "labels": [B,S] i32}
+  * vlm:            + {"patch_embeds": [B,P,D]}
+  * audio (encdec): + {"audio_embeds": [B,T,D]}
+  * decode shapes:  {"token": [B] i32, "pos": scalar i32, "cache": ...}
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import encdec, hybrid, transformer
+from repro.models.config import ModelConfig
+
+__all__ = ["init_params", "forward_logits", "loss_fn", "init_cache",
+           "decode_step", "count_params"]
+
+
+def _mod(cfg: ModelConfig):
+    if cfg.family in ("ssm", "hybrid"):
+        return hybrid
+    if cfg.encoder is not None:
+        return encdec
+    return transformer
+
+
+def init_params(cfg: ModelConfig, key: jax.Array):
+    return _mod(cfg).init_params(cfg, key)
+
+
+def forward_logits(params, cfg: ModelConfig, batch: Dict[str, Any],
+                   last_only: bool = False):
+    tokens = batch["tokens"]
+    if cfg.encoder is not None:
+        return encdec.forward(params, cfg, tokens, batch["audio_embeds"],
+                              last_only=last_only)
+    extra = batch.get("patch_embeds")
+    return _mod(cfg).forward(params, cfg, tokens, extra_embeds=extra,
+                             last_only=last_only)
+
+
+def loss_fn(params, cfg: ModelConfig, batch: Dict[str, Any]) -> jax.Array:
+    """Mean next-token cross entropy (fp32 logits)."""
+    logits = forward_logits(params, cfg, batch)
+    labels = batch["labels"]
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    picked = jnp.take_along_axis(logits, labels[..., None],
+                                 axis=-1)[..., 0]
+    return jnp.mean(lse - picked)
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int,
+               dtype=jnp.bfloat16):
+    return _mod(cfg).init_cache(cfg, batch, max_len, dtype)
+
+
+def decode_step(params, cfg: ModelConfig, cache, token: jax.Array,
+                pos: jax.Array):
+    return _mod(cfg).decode_step(params, cfg, cache, token, pos)
+
+
+def count_params(params) -> int:
+    return sum(int(jnp.size(l)) for l in jax.tree_util.tree_leaves(params))

@@ -1,0 +1,295 @@
+"""Attention — GQA/MQA, sliding-window, local:global, cross, KV-cache decode.
+
+One implementation covers every assigned attention variant:
+
+* **GQA/MQA** — ``n_kv_heads`` ≤ ``n_heads``; queries grouped per kv head.
+* **Sliding window** (h2o-danube, gemma3 local layers) — the mask keeps
+  ``(i − w, i]``; the decode path uses a **ring KV cache** of length ``w``
+  so `long_500k` holds O(w) state, not O(S).
+* **local:global interleave** (gemma3) — the per-layer window scalar is the
+  only difference between layer kinds, so a scanned stack needs no branch.
+* **cross attention** (whisper decoder) — kv from the encoder, no mask,
+  no RoPE.
+
+Softmax statistics are computed in fp32 regardless of compute dtype.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed import hints
+from repro.models.layers import apply_rope, dense, init_dense, rope_freqs
+
+__all__ = ["init_attention", "attention", "AttnCache", "init_attn_cache",
+           "attn_decode"]
+
+_NEG = -1e30
+
+
+def init_attention(key, d_model: int, n_heads: int, n_kv_heads: int,
+                   head_dim: int, *, bias: bool = False, dtype=jnp.float32):
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    return {
+        "wq": init_dense(kq, d_model, n_heads * head_dim, bias=bias, dtype=dtype),
+        "wk": init_dense(kk, d_model, n_kv_heads * head_dim, bias=bias, dtype=dtype),
+        "wv": init_dense(kv, d_model, n_kv_heads * head_dim, bias=bias, dtype=dtype),
+        "wo": init_dense(ko, n_heads * head_dim, d_model, dtype=dtype,
+                         scale=(n_heads * head_dim) ** -0.5),
+    }
+
+
+def _split_heads(x: jax.Array, n: int, d: int) -> jax.Array:
+    return x.reshape(*x.shape[:-1], n, d)
+
+
+def _repeat_kv(kv: jax.Array, hq: int) -> jax.Array:
+    """GQA via head repetition: [B,T,Hk,D] -> [B,T,Hq,D].
+
+    The repeat (vs. a 5-D grouped einsum) keeps every attention einsum a
+    plain head-batched matmul whose HEAD axis GSPMD can shard on `model`;
+    the grouped form tempts the partitioner into sharding the head_dim
+    contraction, which all-reduces the full score tensor per layer
+    (observed, EXPERIMENTS.md §Perf).
+    """
+    hk = kv.shape[2]
+    if hk == hq:
+        return kv
+    return jnp.repeat(kv, hq // hk, axis=2)
+
+
+def _gqa_scores_grouped(q: jax.Array, k: jax.Array) -> jax.Array:
+    """Decode-path GQA: grouped einsum, NO kv repetition — repeating a
+    32k-entry cache ×(Hq/Hk) costs ~20 GB/device; with a 1-token query the
+    grouped form has no large intermediate at all."""
+    b, s, hq, dd = q.shape
+    hk = k.shape[2]
+    qg = q.reshape(b, s, hk, hq // hk, dd)
+    sc = jnp.einsum("bshgd,bthd->bhgst", qg, k)
+    return sc.reshape(b, hq, s, k.shape[1])
+
+
+def _gqa_out_grouped(w: jax.Array, v: jax.Array) -> jax.Array:
+    b, hq, s, t = w.shape
+    hk = v.shape[2]
+    wg = w.reshape(b, hk, hq // hk, s, t)
+    o = jnp.einsum("bhgst,bthd->bshgd", wg, v)
+    return o.reshape(b, s, hq, v.shape[-1])
+
+
+def _gqa_scores(q: jax.Array, k: jax.Array,
+                head_hint: bool = False) -> jax.Array:
+    """q [B,S,Hq,D], k [B,T,Hk,D] -> scores [B,Hq,S,T]."""
+    k = _repeat_kv(k, q.shape[2])
+    if head_hint:       # full-seq path only: decode keeps the cache's
+        # NB: batch must stay on DATA here — a bare None would be a hard
+        # "replicate" constraint and GSPMD then all-gathers the global
+        # K tensor on every chip (observed: 21 GB/device at 32k prefill).
+        k = hints.hint(k, hints.DATA, None, hints.MODEL, None)
+    return jnp.einsum("bshd,bthd->bhst", q, k)
+
+
+def _gqa_out(w: jax.Array, v: jax.Array,
+             head_hint: bool = False) -> jax.Array:
+    """w [B,Hq,S,T], v [B,T,Hk,D] -> [B,S,Hq,D]."""
+    v = _repeat_kv(v, w.shape[1])
+    if head_hint:
+        v = hints.hint(v, hints.DATA, None, hints.MODEL, None)
+    return jnp.einsum("bhst,bthd->bshd", w, v)
+
+
+#: sequences at or above this length use the Q-chunked (flash-style) path.
+CHUNKED_ABOVE = 8192
+Q_CHUNK = 1024
+
+
+def _pick_chunk(s: int, target: int) -> Optional[int]:
+    """Largest divisor of ``s`` that is ≤ target and a multiple of 8 —
+    handles ragged sequences like the VLM's 32768+256 patch prefix
+    (whose 33024 length would otherwise fall back to the O(S²) path)."""
+    for c in range(min(target, s), 7, -1):
+        if s % c == 0 and c % 8 == 0:
+            return c
+    return None
+
+
+def _masked_softmax_attn(q, k, v, positions_q, positions_k, *, causal,
+                         window, head_dim, compute_dtype):
+    """scores -> mask -> softmax -> out for one q block (fp32 softmax)."""
+    scores = _gqa_scores(q, k, head_hint=True).astype(jnp.float32) \
+        * (head_dim ** -0.5)
+    if causal or window is not None:
+        i = positions_q[:, :, None]                  # [B|1, Sq, 1]
+        j = positions_k[:, None, :]                  # [B|1, 1, T]
+        mask = jnp.ones(jnp.broadcast_shapes(i.shape, j.shape), bool)
+        if causal:
+            mask &= j <= i
+        if window is not None:
+            mask &= j > i - window
+        scores = jnp.where(mask[:, None, :, :], scores, _NEG)
+    w = jax.nn.softmax(scores, axis=-1).astype(compute_dtype)
+    return _gqa_out(w, v, head_hint=True)
+
+
+def attention(p, x: jax.Array, *, n_heads: int, n_kv_heads: int,
+              head_dim: int, positions: Optional[jax.Array] = None,
+              window: Optional[int] = None, causal: bool = True,
+              rope_theta: float = 10_000.0,
+              cross_kv: Optional[jax.Array] = None) -> jax.Array:
+    """Full-sequence attention.  x: [B, S, D].  Returns [B, S, D].
+
+    ``cross_kv`` [B, T, D] switches to encoder-decoder cross attention
+    (mask-free, RoPE-free).  ``window``: sliding-window width (None = full).
+
+    Long sequences (S ≥ ``CHUNKED_ABOVE``) run a **query-chunked** pass —
+    a ``lax.scan`` over Q blocks so the [Sq, T] score tile, not the full
+    [S, S] matrix, is the peak live tensor (the memory move that makes the
+    32k-prefill shapes fit; same spirit as flash attention, with the full
+    row softmax computed per block).
+    """
+    b, s, _ = x.shape
+    q = _split_heads(dense(p["wq"], x), n_heads, head_dim)
+    kv_src = cross_kv if cross_kv is not None else x
+    k = _split_heads(dense(p["wk"], kv_src), n_kv_heads, head_dim)
+    v = _split_heads(dense(p["wv"], kv_src), n_kv_heads, head_dim)
+
+    if cross_kv is None:
+        if positions is None:
+            positions = jnp.arange(s)[None, :]
+        cos, sin = rope_freqs(positions, head_dim, rope_theta)
+        q = apply_rope(q, cos, sin)
+        k = apply_rope(k, cos, sin)
+    else:
+        positions = jnp.arange(s)[None, :]
+        causal = False
+        window = None
+    q = hints.hint(q, hints.DATA, None, hints.MODEL, None)
+
+    pos_k = positions if cross_kv is None else jnp.arange(k.shape[1])[None]
+
+    chunk = _pick_chunk(s, Q_CHUNK) if s >= CHUNKED_ABOVE else None
+    if chunk is not None and positions.shape[0] == 1:
+        nq = s // chunk
+        qc = q.reshape(b, nq, chunk, n_heads, head_dim)
+        pq = positions.reshape(1, nq, chunk)
+
+        def blk(_, inp):
+            qb, pb = inp                       # [b, Qc, H, D], [1, Qc]
+            ob = _masked_softmax_attn(
+                qb, k, v, pb, pos_k, causal=causal, window=window,
+                head_dim=head_dim, compute_dtype=x.dtype)
+            return None, ob
+
+        _, o = jax.lax.scan(blk, None,
+                            (qc.swapaxes(0, 1), pq.swapaxes(0, 1)))
+        o = o.swapaxes(0, 1).reshape(b, s, n_heads, head_dim)
+    else:
+        o = _masked_softmax_attn(q, k, v, positions, pos_k, causal=causal,
+                                 window=window, head_dim=head_dim,
+                                 compute_dtype=x.dtype)
+    return dense(p["wo"], o.reshape(b, s, n_heads * head_dim))
+
+
+# ------------------------------------------------------------------ decode
+@dataclasses.dataclass(frozen=True)
+class AttnCache:
+    """KV cache for one attention layer — stored HEAD-MAJOR.
+
+    Full-context layers: ``k/v [B, Hk, S_max, D]``, slot = position.
+    Windowed layers: ``k/v [B, Hk, w, D]`` ring buffer, slot = pos mod w.
+    Head-major matches the decode einsum's dot layout directly: the
+    seq-major layout cost one 2×cache-slice transpose-copy per layer per
+    token (EXPERIMENTS.md §Perf hillclimb 3).  ``ring`` is static
+    metadata (not a traced leaf).
+    """
+    k: jax.Array
+    v: jax.Array
+    ring: bool
+
+
+jax.tree_util.register_dataclass(AttnCache, data_fields=["k", "v"],
+                                 meta_fields=["ring"])
+
+
+def init_attn_cache(batch: int, length: int, n_kv_heads: int, head_dim: int,
+                    *, ring: bool = False, dtype=jnp.bfloat16) -> AttnCache:
+    shape = (batch, n_kv_heads, length, head_dim)
+    return AttnCache(jnp.zeros(shape, dtype), jnp.zeros(shape, dtype), ring)
+
+
+def _scores_headmajor(q: jax.Array, kT: jax.Array) -> jax.Array:
+    """q [B,1,Hq,D] × head-major cache kT [B,Hk,T,D] -> [B,Hq,1,T].
+
+    No kv repetition, no transpose: the cache layout already matches the
+    dot_general batch/contraction arrangement."""
+    b, s, hq, dd = q.shape
+    hk = kT.shape[1]
+    qg = q.reshape(b, s, hk, hq // hk, dd)
+    sc = jnp.einsum("bshgd,bhtd->bhgst", qg, kT)
+    return sc.reshape(b, hq, s, kT.shape[2])
+
+
+def _out_headmajor(w: jax.Array, vT: jax.Array) -> jax.Array:
+    """w [B,Hq,1,T] × head-major vT [B,Hk,T,D] -> [B,1,Hq,D]."""
+    b, hq, s, t = w.shape
+    hk = vT.shape[1]
+    wg = w.reshape(b, hk, hq // hk, s, t)
+    o = jnp.einsum("bhgst,bhtd->bshgd", wg, vT)
+    return o.reshape(b, s, hq, vT.shape[-1])
+
+
+def attn_decode(p, x: jax.Array, cache: AttnCache, pos: jax.Array, *,
+                n_heads: int, n_kv_heads: int, head_dim: int,
+                window: Optional[int] = None,
+                rope_theta: float = 10_000.0):
+    """One-token decode.  x: [B, 1, D]; pos: scalar OR [B] int32 (tokens
+    so far, per request slot — ragged continuous batching).
+
+    Returns (y [B, 1, D], updated cache).
+    """
+    b = x.shape[0]
+    length = cache.k.shape[2]
+    q = _split_heads(dense(p["wq"], x), n_heads, head_dim)
+    k = _split_heads(dense(p["wk"], x), n_kv_heads, head_dim)
+    v = _split_heads(dense(p["wv"], x), n_kv_heads, head_dim)
+
+    pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (b,))   # [B]
+    cos, sin = rope_freqs(pos[:, None], head_dim, rope_theta)   # [B,1,half]
+    q = apply_rope(q, cos, sin)
+    k = apply_rope(k, cos, sin)
+
+    slot = pos % length if cache.ring else pos                  # [B]
+    # Per-row scatter (NOT dynamic-update-slice): a DUS variant was tried
+    # for the uniform-position fast path and REFUTED — XLA's aliasing
+    # analysis failed to prove the in-place update safe against the same-
+    # iteration read and inserted a full-cache copy per layer (~275 GB/
+    # step at 32k); the scatter aliases cleanly (EXPERIMENTS.md §Perf).
+    bidx = jnp.arange(b)[:, None]                   # [B,1]
+    hidx = jnp.arange(n_kv_heads)[None, :]          # [1,Hk]
+    ck = cache.k.at[bidx, hidx, slot[:, None]].set(
+        k[:, 0].astype(cache.k.dtype))              # k[:,0]: [B,Hk,D]
+    cv = cache.v.at[bidx, hidx, slot[:, None]].set(
+        v[:, 0].astype(cache.v.dtype))
+
+    scores = _scores_headmajor(q, ck.astype(x.dtype)).astype(jnp.float32) \
+        * (head_dim ** -0.5)                        # [B, Hq, 1, L]
+    j = jnp.arange(length)[None, :]                 # [1, L]
+    pb = pos[:, None]
+    if cache.ring:
+        # Ring of length w: slot s holds the most recent position ≡ s
+        # (mod w), which is always within the window once written.  Before
+        # the first wrap only slots ≤ pos are written.
+        valid = jnp.where(pb >= length, jnp.ones((b, length), bool),
+                          j <= pb)
+    else:
+        valid = j <= pb
+        if window is not None:
+            valid &= j > pb - window
+    scores = jnp.where(valid[:, None, None, :], scores, _NEG)
+    w = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+    o = _out_headmajor(w, cv.astype(x.dtype))
+    y = dense(p["wo"], o.reshape(b, 1, n_heads * head_dim))
+    return y, AttnCache(ck, cv, cache.ring)

@@ -1,0 +1,196 @@
+"""SSM and hybrid LMs — mamba2-780m (pure SSD stack) and zamba2 (SSD
+backbone + one *shared* attention block invoked every ``attn_every``
+layers, weights reused across invocations — the zamba2 signature).
+
+Both families run `long_500k`: decode state is O(1) in sequence length for
+the SSD layers; zamba2's shared-attention invocations each keep their own
+KV cache slot (same weights ≠ same activations).
+
+Simplifications vs. the released zamba2 checkpoints (noted in DESIGN.md):
+the shared block's per-invocation LoRA deltas and the concat-input variant
+are omitted; the shared block is a standard pre-norm attn+MLP pair.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.attention import (AttnCache, attention, attn_decode,
+                                    init_attention)
+from repro.models.config import ModelConfig
+from repro.models.layers import (embed, ffn, init_embedding, init_mlp,
+                                 init_norm, norm, unembed)
+from repro.models.ssm import (SSMCache, init_mamba2, init_ssm_cache,
+                              mamba2_decode, mamba2_forward)
+
+__all__ = ["init_params", "forward", "init_cache", "decode_step"]
+
+
+def _n_inv(cfg: ModelConfig) -> int:
+    return cfg.n_layers // cfg.attn_every if cfg.attn_every else 0
+
+
+def _init_ssm_layer(key, cfg: ModelConfig):
+    return {"ln": init_norm(cfg.d_model, cfg.norm_kind),
+            "ssm": init_mamba2(key, cfg.d_model, cfg.ssm)}
+
+
+def init_params(cfg: ModelConfig, key: jax.Array):
+    ke, kl, ks = jax.random.split(key, 3)
+    layer_keys = jax.random.split(kl, cfg.n_layers)
+    params = {
+        "embed": init_embedding(ke, cfg.vocab, cfg.d_model),
+        "layers": jax.vmap(lambda k: _init_ssm_layer(k, cfg))(layer_keys),
+        "ln_f": init_norm(cfg.d_model, cfg.norm_kind),
+    }
+    if cfg.attn_every:                         # zamba2 shared block
+        ka, km = jax.random.split(ks)
+        params["shared"] = {
+            "ln1": init_norm(cfg.d_model, cfg.norm_kind),
+            "attn": init_attention(ka, cfg.d_model, cfg.n_heads,
+                                   cfg.n_kv_heads, cfg.hd),
+            "ln2": init_norm(cfg.d_model, cfg.norm_kind),
+            "mlp": init_mlp(km, cfg.d_model, cfg.d_ff),
+        }
+    return params
+
+
+def _shared_block(sp, x, cfg: ModelConfig, positions):
+    h = x + attention(sp["attn"], norm(sp["ln1"], x, cfg.norm_eps),
+                      n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads,
+                      head_dim=cfg.hd, positions=positions, causal=True,
+                      rope_theta=cfg.rope_theta)
+    return h + ffn(sp["mlp"], norm(sp["ln2"], h, cfg.norm_eps))
+
+
+def _layer_groups(cfg: ModelConfig):
+    """Split the layer stack into runs of ``attn_every`` SSD layers, each
+    (except a remainder) followed by one shared-attention invocation.
+    Returns [(start, length, attn_after?)] — static structure, so the
+    forward is grouped scans with the shared block BETWEEN groups instead
+    of a per-layer lax.cond (whose untaken branch still costs compile
+    size, branch overhead, and poisons cost analysis)."""
+    L, every = cfg.n_layers, cfg.attn_every
+    if not every:
+        return [(0, L, False)]
+    out = []
+    start = 0
+    while start + every <= L:
+        out.append((start, every, True))
+        start += every
+    if start < L:
+        out.append((start, L - start, False))
+    return out
+
+
+def forward(params, cfg: ModelConfig, tokens: jax.Array,
+            extra_embeds: Optional[jax.Array] = None,
+            last_only: bool = False) -> jax.Array:
+    from repro.distributed import hints
+
+    dt = jnp.dtype(cfg.dtype)
+    x = embed(params["embed"], tokens, dt)
+    if extra_embeds is not None:
+        x = jnp.concatenate([extra_embeds.astype(dt), x], axis=1)
+    s = x.shape[1]
+    positions = jnp.arange(s)[None, :]
+    shared = params.get("shared")
+
+    def body(h, lp):
+        h = hints.hint(h, hints.DATA, hints.MODEL, None)   # SP boundary
+        # gather the block INPUT (small) so in_proj stays sharded — same
+        # Megatron-SP gather-direction fix as transformer._block
+        u = hints.hint(norm(lp["ln"], h, cfg.norm_eps),
+                       hints.DATA, None, None)
+        h = h + hints.hint(
+            mamba2_forward(lp["ssm"], u, cfg.d_model, cfg.ssm,
+                           norm_eps=cfg.norm_eps),
+            hints.DATA, hints.MODEL, None)
+        return h, None
+
+    body_fn = jax.checkpoint(body) if cfg.remat else body
+    for start, length, attn_after in _layer_groups(cfg):
+        lp = jax.tree_util.tree_map(lambda a: a[start:start + length],
+                                    params["layers"])
+        x, _ = jax.lax.scan(body_fn, x, lp)
+        if attn_after and shared is not None:
+            x = _shared_block(shared, x, cfg, positions)
+
+    x = norm(params["ln_f"], x, cfg.norm_eps)
+    if last_only:
+        x = x[:, -1:]
+    elif extra_embeds is not None:
+        x = x[:, extra_embeds.shape[1]:]
+    return unembed(params["embed"], x)
+
+
+# ------------------------------------------------------------------ decode
+def init_cache(cfg: ModelConfig, batch: int, max_len: int,
+               dtype=jnp.bfloat16):
+    di = cfg.ssm.d_inner(cfg.d_model)
+    h = cfg.ssm.n_ssm_heads(cfg.d_model)
+    L = cfg.n_layers
+    cache = {"ssm": SSMCache(
+        conv=jnp.zeros((L, batch, cfg.ssm.d_conv - 1,
+                        di + 2 * cfg.ssm.d_state), dtype),
+        ssm=jnp.zeros((L, batch, h, cfg.ssm.headdim, cfg.ssm.d_state),
+                      dtype))}
+    n_inv = _n_inv(cfg)
+    if n_inv:
+        shape = (n_inv, batch, cfg.n_kv_heads, max_len, cfg.hd)  # head-major
+        cache["attn"] = AttnCache(jnp.zeros(shape, dtype),
+                                  jnp.zeros(shape, dtype), False)
+    return cache
+
+
+def decode_step(params, cfg: ModelConfig, cache, token: jax.Array,
+                pos: jax.Array):
+    dt = jnp.dtype(cfg.dtype)
+    x = embed(params["embed"], token[:, None], dt)
+    shared = params.get("shared")
+
+    def body(carry, scanned):
+        h, = carry
+        lp, sc = scanned
+        y, sc2 = mamba2_decode(lp["ssm"], norm(lp["ln"], h, cfg.norm_eps),
+                               sc, cfg.d_model, cfg.ssm,
+                               norm_eps=cfg.norm_eps)
+        return (h + y,), sc2
+
+    new_attn = cache.get("attn")
+    new_ssm_parts = []
+    inv = 0
+    for start, length, attn_after in _layer_groups(cfg):
+        lp = jax.tree_util.tree_map(lambda a: a[start:start + length],
+                                    params["layers"])
+        sc = jax.tree_util.tree_map(lambda a: a[start:start + length],
+                                    cache["ssm"])
+        (x,), sc2 = jax.lax.scan(body, (x,), (lp, sc))
+        new_ssm_parts.append(sc2)
+        if attn_after and shared is not None:
+            # shared weights, but a distinct (statically indexed) KV slot
+            # per invocation — same weights ≠ same activations
+            c = jax.tree_util.tree_map(lambda a: a[inv], new_attn)
+            u = norm(shared["ln1"], x, cfg.norm_eps)
+            y2, c2 = attn_decode(shared["attn"], u, c, pos,
+                                 n_heads=cfg.n_heads,
+                                 n_kv_heads=cfg.n_kv_heads,
+                                 head_dim=cfg.hd,
+                                 rope_theta=cfg.rope_theta)
+            x = x + y2
+            x = x + ffn(shared["mlp"], norm(shared["ln2"], x,
+                                            cfg.norm_eps))
+            new_attn = jax.tree_util.tree_map(
+                lambda a, upd, i=inv: a.at[i].set(upd.astype(a.dtype)),
+                new_attn, c2)
+            inv += 1
+
+    new_ssm = jax.tree_util.tree_map(
+        lambda *parts: jnp.concatenate(parts, axis=0), *new_ssm_parts)
+    x = norm(params["ln_f"], x, cfg.norm_eps)
+    new_cache = {"ssm": new_ssm}
+    if new_attn is not None:
+        new_cache["attn"] = new_attn
+    return unembed(params["embed"], x)[:, 0], new_cache

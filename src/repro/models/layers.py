@@ -1,0 +1,138 @@
+"""Elementary layers — pure-JAX, params as nested dicts of arrays.
+
+Every ``init_*`` returns a params pytree; every ``apply`` function is pure
+and shape-polymorphic over leading batch dims.  Compute runs at
+``cfg.dtype`` (bf16 on TPU) with fp32 params — the same
+"operator one tier below the iterate" principle as the paper's Mix-V3.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["init_dense", "dense", "init_rmsnorm", "rmsnorm", "init_layernorm",
+           "layernorm", "norm", "init_norm", "init_embedding", "embed",
+           "unembed", "init_mlp", "mlp", "init_mlp_gelu", "mlp_gelu", "ffn",
+           "rope_freqs", "apply_rope"]
+
+
+def _tn(key, shape, scale, dtype):
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32)
+            * scale).astype(dtype)
+
+
+# --------------------------------------------------------------------- dense
+def init_dense(key, d_in: int, d_out: int, *, bias: bool = False,
+               dtype=jnp.float32, scale: float | None = None):
+    scale = scale if scale is not None else d_in ** -0.5
+    p = {"w": _tn(key, (d_in, d_out), scale, dtype)}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), dtype)
+    return p
+
+
+def dense(p, x: jax.Array, compute_dtype=None) -> jax.Array:
+    dt = compute_dtype or x.dtype
+    y = x.astype(dt) @ p["w"].astype(dt)
+    if "b" in p:
+        y = y + p["b"].astype(dt)
+    return y
+
+
+# ------------------------------------------------------------------- rmsnorm
+def init_rmsnorm(d: int, dtype=jnp.float32):
+    return {"g": jnp.ones((d,), dtype)}
+
+
+def rmsnorm(p, x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)                      # norm stats in fp32
+    ms = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(ms + eps)).astype(dt) * p["g"].astype(dt)
+
+
+# ----------------------------------------------------------------- layernorm
+def init_layernorm(d: int, dtype=jnp.float32):
+    return {"g": jnp.ones((d,), dtype), "b": jnp.zeros((d,), dtype)}
+
+
+def layernorm(p, x: jax.Array, eps: float = 1e-5) -> jax.Array:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return y.astype(dt) * p["g"].astype(dt) + p["b"].astype(dt)
+
+
+def norm(p, x: jax.Array, eps: float) -> jax.Array:
+    """Dispatch on param structure: LayerNorm iff a bias is present."""
+    return layernorm(p, x, eps) if "b" in p else rmsnorm(p, x, eps)
+
+
+def init_norm(d: int, kind: str = "rms", dtype=jnp.float32):
+    return init_layernorm(d, dtype) if kind == "ln" else init_rmsnorm(d, dtype)
+
+
+# ----------------------------------------------------------------- embedding
+def init_embedding(key, vocab: int, d: int, dtype=jnp.float32):
+    return {"e": _tn(key, (vocab, d), 1.0, dtype)}
+
+
+def embed(p, tokens: jax.Array, compute_dtype=jnp.bfloat16) -> jax.Array:
+    return jnp.take(p["e"], tokens, axis=0).astype(compute_dtype)
+
+
+def unembed(p, x: jax.Array) -> jax.Array:
+    """Tied unembedding: logits in fp32 (loss numerics)."""
+    return x.astype(jnp.float32) @ p["e"].astype(jnp.float32).T
+
+
+# ---------------------------------------------------------------------- mlp
+def init_mlp(key, d: int, f: int, dtype=jnp.float32):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {"wi": init_dense(k1, d, f, dtype=dtype),
+            "wg": init_dense(k2, d, f, dtype=dtype),
+            "wo": init_dense(k3, f, d, dtype=dtype, scale=f ** -0.5)}
+
+
+def mlp(p, x: jax.Array) -> jax.Array:
+    """SwiGLU: wo(silu(wg x) * wi x)."""
+    h = jax.nn.silu(dense(p["wg"], x)) * dense(p["wi"], x)
+    return dense(p["wo"], h)
+
+
+def init_mlp_gelu(key, d: int, f: int, dtype=jnp.float32):
+    """2-matrix GELU MLP (whisper-style)."""
+    k1, k2 = jax.random.split(key)
+    return {"wi": init_dense(k1, d, f, bias=True, dtype=dtype),
+            "wo": init_dense(k2, f, d, bias=True, dtype=dtype,
+                             scale=f ** -0.5)}
+
+
+def mlp_gelu(p, x: jax.Array) -> jax.Array:
+    return dense(p["wo"], jax.nn.gelu(dense(p["wi"], x)))
+
+
+def ffn(p, x: jax.Array) -> jax.Array:
+    """Dispatch on param structure: SwiGLU iff a gate matrix is present."""
+    return mlp(p, x) if "wg" in p else mlp_gelu(p, x)
+
+
+# --------------------------------------------------------------------- rope
+def rope_freqs(positions: jax.Array, head_dim: int,
+               theta: float = 10_000.0):
+    """cos/sin tables for ``positions`` (any shape) -> (*pos, head_dim/2)."""
+    half = head_dim // 2
+    inv = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    ang = positions.astype(jnp.float32)[..., None] * inv
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jax.Array, cos: jax.Array, sin: jax.Array) -> jax.Array:
+    """x: [..., S, H, D]; cos/sin: [..., S, D/2] (broadcast over heads)."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    c = cos[..., None, :].astype(x.dtype)           # add head axis
+    s = sin[..., None, :].astype(x.dtype)
+    return jnp.concatenate([x1 * c - x2 * s, x2 * c + x1 * s], axis=-1)

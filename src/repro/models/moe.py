@@ -1,0 +1,112 @@
+"""Mixture-of-experts FFN — top-k routing with capacity, EP-shardable.
+
+Dispatch is *scatter-based* (position-in-expert via a cumsum rank), not
+one-hot-einsum based: the dense dispatch tensor ``[tokens, E, C]`` that the
+classic Mesh-TF formulation materializes would be ~100 MB/device at the
+32k-prefill shapes, while the scatter form keeps only the ``[E, C, D]``
+expert buffers.  Expert weights carry a leading ``E`` axis that the
+distributed layer shards on the ``model`` axis (expert parallelism); the
+token→expert scatter then lowers to the all-to-all exchange.
+
+Capacity: ``C = ceil(tokens · top_k · capacity_factor / E)`` tokens per
+expert; overflow tokens are dropped (weight renormalized over surviving
+experts — standard Switch/GShard semantics).  The router computes in fp32.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import MoEConfig
+from repro.models.layers import init_dense, init_mlp
+
+__all__ = ["init_moe", "moe_ffn"]
+
+
+def init_moe(key, d: int, f: int, cfg: MoEConfig, dtype=jnp.float32):
+    kr, ke = jax.random.split(key)
+    # Expert weights: stacked on a leading E axis (the EP shard axis).
+    keys = jax.random.split(ke, 3)
+    E = cfg.n_experts
+    return {
+        "router": init_dense(kr, d, E, dtype=dtype),
+        "wi": (jax.random.truncated_normal(keys[0], -2, 2, (E, d, f),
+                                           jnp.float32) * d ** -0.5).astype(dtype),
+        "wg": (jax.random.truncated_normal(keys[1], -2, 2, (E, d, f),
+                                           jnp.float32) * d ** -0.5).astype(dtype),
+        "wo": (jax.random.truncated_normal(keys[2], -2, 2, (E, f, d),
+                                           jnp.float32) * f ** -0.5).astype(dtype),
+    }
+
+
+#: tokens per routing group (GShard-style).  Groups shard on the data
+#: axis; the dispatch tensor per device is [G/dp, GROUP, E/mp, C] — small.
+GROUP = 1024
+
+
+def moe_ffn(p, x: jax.Array, cfg: MoEConfig) -> jax.Array:
+    """x: [B, S, D] -> [B, S, D].  Router/combine in fp32.
+
+    Dispatch is the GShard grouped-einsum form: tokens are partitioned
+    into fixed groups, positions-in-expert come from an in-group cumsum,
+    and dispatch/combine are one-hot einsums.  An earlier scatter-based
+    dispatch was *replicated* by the SPMD partitioner ("involuntary full
+    rematerialization") costing ~17 GB/device at the 32k shapes — einsum
+    dispatch shards cleanly (EXPERIMENTS.md §Perf).
+    """
+    from repro.distributed import hints
+
+    b, s, d = x.shape
+    E, K = cfg.n_experts, cfg.top_k
+    n = b * s
+    g_sz = min(GROUP, n)
+    n_pad = math.ceil(n / g_sz) * g_sz
+    xt = x.reshape(n, d)
+    if n_pad != n:
+        xt = jnp.concatenate(
+            [xt, jnp.zeros((n_pad - n, d), x.dtype)], axis=0)
+    G = n_pad // g_sz
+    xg = hints.hint(xt.reshape(G, g_sz, d), hints.DATA, None, None)
+
+    logits = jnp.einsum("gsd,de->gse", xg.astype(jnp.float32),
+                        p["router"]["w"].astype(jnp.float32))
+    gates = jax.nn.softmax(logits, axis=-1)                  # [G, S, E]
+    topw, tope = jax.lax.top_k(gates, K)                     # [G, S, K]
+    topw = topw / jnp.clip(topw.sum(-1, keepdims=True), 1e-9)
+
+    cap = max(1, math.ceil(g_sz * K * cfg.capacity_factor / E))
+
+    # Position of each (token, k) among same-expert picks within the
+    # group: exclusive cumsum over the flattened (S, K) order.
+    sel = jax.nn.one_hot(tope, E, dtype=jnp.int32)           # [G, S, K, E]
+    flat = sel.reshape(G, g_sz * K, E)
+    pos = jnp.cumsum(flat, axis=1) - flat                    # exclusive
+    pos = jnp.sum(pos.reshape(G, g_sz, K, E) * sel, axis=-1)  # [G, S, K]
+    keep = pos < cap
+    w_kept = jnp.where(keep, topw, 0.0)
+
+    # dispatch [G, S, E, C] (bf16 one-hot; E shards on model, G on data)
+    pos_oh = jax.nn.one_hot(jnp.where(keep, pos, cap), cap,
+                            dtype=x.dtype)                   # [G, S, K, C]
+    disp = jnp.einsum("gske,gskc->gsec", sel.astype(x.dtype), pos_oh)
+    comb = jnp.einsum("gske,gskc,gsk->gsec", sel.astype(jnp.float32),
+                      pos_oh.astype(jnp.float32), w_kept)
+
+    xe = jnp.einsum("gsec,gsd->egcd", disp, xg)              # [E, G, C, D]
+    xe = hints.hint(xe, hints.MODEL, hints.DATA, None, None)
+    h = jax.nn.silu(jnp.einsum("egcd,edf->egcf", xe,
+                               p["wg"].astype(x.dtype))) \
+        * jnp.einsum("egcd,edf->egcf", xe, p["wi"].astype(x.dtype))
+    ye = jnp.einsum("egcf,efd->egcd", h, p["wo"].astype(x.dtype))
+
+    y = jnp.einsum("gsec,egcd->gsd", comb,
+                   ye.astype(jnp.float32))                   # [G, S, D]
+    # cast BEFORE the group->batch reshape and pin the sharding: the f32
+    # [G,S,D] reshape to a (batch, seq-model)-sharded target is one GSPMD
+    # cannot reshard efficiently — it replicated the full 21 GB tensor
+    # per device at the multi-pod 32k shapes (EXPERIMENTS.md §Perf M9)
+    y = hints.hint(y.astype(x.dtype), hints.DATA, None, None)
+    y = y.reshape(n_pad, d)[:n]
+    return hints.hint(y.reshape(b, s, d), hints.DATA, None, None)

@@ -1,0 +1,231 @@
+"""Mamba2 (SSD — state-space duality) layer, chunked matmul form + decode.
+
+The SSD algorithm [arXiv:2405.21060] computes the selective-SSM recurrence
+
+    h_t = exp(A·dt_t) h_{t-1} + dt_t · B_t ⊗ x_t ,   y_t = C_t · h_t + D·x_t
+
+in a chunk-quadratic / cross-chunk-linear form that is MXU-friendly:
+within a chunk of length Q the interaction is a masked [Q, Q] matmul
+(exactly a decayed attention score), and chunk boundary states are carried
+by a short ``lax.scan``.  Training/prefill use chunks; decode holds the
+O(H·P·N) state — this is why the SSM/hybrid archs run the `long_500k`
+shape (constant state) while full-attention archs skip it.
+
+Head dim P = ``headdim``, state N = ``d_state``, H = d_inner / P heads,
+single B/C group (n_groups = 1).  Heads shard on the `model` mesh axis.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import SSMConfig
+from repro.models.layers import init_dense, init_rmsnorm, rmsnorm
+
+__all__ = ["init_mamba2", "mamba2_forward", "SSMCache", "init_ssm_cache",
+           "mamba2_decode"]
+
+
+def init_mamba2(key, d_model: int, cfg: SSMConfig, dtype=jnp.float32):
+    di = cfg.d_inner(d_model)
+    h = cfg.n_ssm_heads(d_model)
+    n = cfg.d_state
+    conv_ch = di + 2 * n
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    return {
+        # z, x, B, C, dt  packed in one projection
+        "in_proj": init_dense(k1, d_model, 2 * di + 2 * n + h, dtype=dtype),
+        "conv_w": (jax.random.truncated_normal(
+            k2, -2, 2, (cfg.d_conv, conv_ch), jnp.float32)
+            * cfg.d_conv ** -0.5).astype(dtype),
+        "conv_b": jnp.zeros((conv_ch,), dtype),
+        "A_log": jnp.zeros((h,), dtype),               # A = -exp(A_log) = -1
+        "D": jnp.ones((h,), dtype),
+        "dt_bias": jnp.zeros((h,), dtype),
+        "norm": init_rmsnorm(di, dtype),
+        "out_proj": init_dense(k3, di, d_model, dtype=dtype,
+                               scale=di ** -0.5),
+    }
+
+
+def _split_proj(p, u, di: int, n: int, h: int):
+    z = u[..., :di]
+    xbc = u[..., di: di + di + 2 * n]
+    dt = u[..., -h:]
+    return z, xbc, dt
+
+
+def _causal_conv(xbc: jax.Array, w: jax.Array, b: jax.Array,
+                 init_state: Optional[jax.Array] = None):
+    """Depthwise causal conv, width K.  xbc: [B, S, C]; w: [K, C].
+
+    Returns (out [B, S, C], final (K-1)-tap state [B, K-1, C])."""
+    k = w.shape[0]
+    pad = init_state if init_state is not None else jnp.zeros(
+        (xbc.shape[0], k - 1, xbc.shape[2]), xbc.dtype)
+    xp = jnp.concatenate([pad, xbc], axis=1)
+    out = sum(xp[:, i: i + xbc.shape[1]] * w[i].astype(xbc.dtype)
+              for i in range(k))
+    out = out + b.astype(xbc.dtype)
+    return jax.nn.silu(out), xp[:, -(k - 1):]
+
+
+def _ssd_chunked(x, dt, a_head, B, C, chunk: int,
+                 h0: Optional[jax.Array] = None):
+    """Chunked SSD scan.
+
+    x [b,s,h,p]; dt [b,s,h] (post-softplus); a_head [h] (negative);
+    B, C [b,s,n].  Returns (y [b,s,h,p], h_last [b,h,p,n]).
+    """
+    b, s, h, p = x.shape
+    n = B.shape[-1]
+    q = min(chunk, s)
+    nc = -(-s // q)
+    if s % q:                                  # pad tail chunk
+        padlen = nc * q - s
+        x = jnp.pad(x, ((0, 0), (0, padlen), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, padlen), (0, 0)))
+        B = jnp.pad(B, ((0, 0), (0, padlen), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, padlen), (0, 0)))
+    xq = x.reshape(b, nc, q, h, p)
+    dtq = dt.reshape(b, nc, q, h).astype(jnp.float32)
+    Bq = B.reshape(b, nc, q, n)
+    Cq = C.reshape(b, nc, q, n)
+
+    a = dtq * a_head.astype(jnp.float32)                  # [b,nc,q,h] ≤ 0
+    cum = jnp.cumsum(a, axis=2)                           # inclusive
+    # ---- intra-chunk (masked decayed attention on the MXU) ----
+    decay = jnp.exp(cum[:, :, :, None, :] - cum[:, :, None, :, :])
+    mask = jnp.tril(jnp.ones((q, q), bool))
+    g = jnp.einsum("bcin,bcjn->bcij", Cq.astype(jnp.float32),
+                   Bq.astype(jnp.float32))
+    w = g[..., None] * decay * dtq[:, :, None, :, :]
+    w = jnp.where(mask[None, None, :, :, None], w, 0.0)
+    y_intra = jnp.einsum("bcijh,bcjhp->bcihp", w,
+                         xq.astype(jnp.float32))
+
+    # ---- chunk summary states ----
+    seg = jnp.exp(cum[:, :, -1:, :] - cum)                # [b,nc,q,h]
+    s_c = jnp.einsum("bcqh,bcqn,bcqhp->bchpn", seg * dtq, Bq.astype(jnp.float32),
+                     xq.astype(jnp.float32))              # [b,nc,h,p,n]
+    chunk_decay = jnp.exp(cum[:, :, -1, :])               # [b,nc,h]
+
+    # ---- cross-chunk recurrence ----
+    h_init = (jnp.zeros((b, h, p, n), jnp.float32) if h0 is None
+              else h0.astype(jnp.float32))
+
+    def step(hprev, inp):
+        dec, sc = inp                                     # [b,h], [b,h,p,n]
+        hnew = dec[:, :, None, None] * hprev + sc
+        return hnew, hprev                                # emit PRE-state
+
+    h_last, h_prevs = jax.lax.scan(
+        step, h_init, (chunk_decay.swapaxes(0, 1), s_c.swapaxes(0, 1)))
+    h_prevs = h_prevs.swapaxes(0, 1)                      # [b,nc,h,p,n]
+
+    y_inter = jnp.einsum("bcqn,bcqh,bchpn->bcqhp", Cq.astype(jnp.float32),
+                         jnp.exp(cum), h_prevs)
+    y = (y_intra + y_inter).reshape(b, nc * q, h, p)[:, :s]
+    return y, h_last
+
+
+def mamba2_forward(p, x: jax.Array, d_model: int, cfg: SSMConfig, *,
+                   norm_eps: float = 1e-6,
+                   conv_state: Optional[jax.Array] = None,
+                   ssm_state: Optional[jax.Array] = None,
+                   return_state: bool = False):
+    """Full-sequence Mamba2 block (pre-norm residual NOT included).
+
+    x: [B, S, D] -> [B, S, D]  (+ (conv_state, ssm_state) if requested).
+    """
+    di = cfg.d_inner(d_model)
+    n = cfg.d_state
+    h = cfg.n_ssm_heads(d_model)
+    pdim = cfg.headdim
+
+    u = x @ p["in_proj"]["w"].astype(x.dtype)
+    z, xbc, dt = _split_proj(p, u, di, n, h)
+    xbc, conv_out_state = _causal_conv(xbc, p["conv_w"], p["conv_b"],
+                                       conv_state)
+    xc = xbc[..., :di]
+    B = xbc[..., di: di + n]
+    C = xbc[..., di + n:]
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))
+    a_head = -jnp.exp(p["A_log"].astype(jnp.float32))
+    xh = xc.reshape(*xc.shape[:-1], h, pdim)
+    # SSD heads shard on `model` — the chunk-quadratic decay tensor
+    # [b, nc, q, q, h] is the biggest live tensor and divides by heads.
+    from repro.distributed import hints
+    xh = hints.hint(xh, hints.DATA, None, hints.MODEL, None)
+    dt = hints.hint(dt, hints.DATA, None, hints.MODEL)
+    y, h_last = _ssd_chunked(xh, dt, a_head, B, C, cfg.chunk, ssm_state)
+    y = y + p["D"].astype(jnp.float32)[:, None] * xh.astype(jnp.float32)
+    y = y.reshape(*x.shape[:-1], di).astype(x.dtype)
+    y = rmsnorm(p["norm"], y, norm_eps) * jax.nn.silu(z)
+    out = y @ p["out_proj"]["w"].astype(x.dtype)
+    if return_state:
+        return out, (conv_out_state, h_last.astype(x.dtype))
+    return out
+
+
+# ------------------------------------------------------------------ decode
+@dataclasses.dataclass(frozen=True)
+class SSMCache:
+    """Per-layer decode state: conv taps [B, K-1, C] + SSM state
+    [B, H, P, N] — constant in sequence length (the long_500k enabler)."""
+    conv: jax.Array
+    ssm: jax.Array
+
+
+jax.tree_util.register_dataclass(SSMCache, data_fields=["conv", "ssm"],
+                                 meta_fields=[])
+
+
+def init_ssm_cache(batch: int, d_model: int, cfg: SSMConfig,
+                   dtype=jnp.bfloat16) -> SSMCache:
+    di = cfg.d_inner(d_model)
+    h = cfg.n_ssm_heads(d_model)
+    return SSMCache(
+        conv=jnp.zeros((batch, cfg.d_conv - 1, di + 2 * cfg.d_state), dtype),
+        ssm=jnp.zeros((batch, h, cfg.headdim, cfg.d_state), dtype))
+
+
+def mamba2_decode(p, x: jax.Array, cache: SSMCache, d_model: int,
+                  cfg: SSMConfig, *, norm_eps: float = 1e-6):
+    """One-token step.  x: [B, 1, D].  Returns (y [B, 1, D], new cache)."""
+    di = cfg.d_inner(d_model)
+    n = cfg.d_state
+    h = cfg.n_ssm_heads(d_model)
+    pdim = cfg.headdim
+
+    u = x @ p["in_proj"]["w"].astype(x.dtype)
+    z, xbc, dt = _split_proj(p, u, di, n, h)
+    # conv over (K-1 cached taps + this token)
+    xp = jnp.concatenate([cache.conv.astype(x.dtype), xbc], axis=1)
+    k = p["conv_w"].shape[0]
+    conv_out = sum(xp[:, i: i + 1] * p["conv_w"][i].astype(x.dtype)
+                   for i in range(k)) + p["conv_b"].astype(x.dtype)
+    xbc1 = jax.nn.silu(conv_out)                          # [B, 1, C]
+    xc = xbc1[..., :di]
+    B = xbc1[..., di: di + n][:, 0]                       # [B, N]
+    C = xbc1[..., di + n:][:, 0]
+
+    dt1 = jax.nn.softplus(dt.astype(jnp.float32)
+                          + p["dt_bias"].astype(jnp.float32))[:, 0]  # [B,H]
+    a_head = -jnp.exp(p["A_log"].astype(jnp.float32))
+    dec = jnp.exp(dt1 * a_head)                           # [B, H]
+    xh = xc.reshape(x.shape[0], h, pdim).astype(jnp.float32)
+    upd = jnp.einsum("bh,bn,bhp->bhpn", dt1, B.astype(jnp.float32), xh)
+    ssm = dec[:, :, None, None] * cache.ssm.astype(jnp.float32) + upd
+    y = jnp.einsum("bn,bhpn->bhp", C.astype(jnp.float32), ssm)
+    y = y + p["D"].astype(jnp.float32)[:, None] * xh
+    y = y.reshape(x.shape[0], 1, di).astype(x.dtype)
+    y = rmsnorm(p["norm"], y, norm_eps) * jax.nn.silu(z)
+    out = y @ p["out_proj"]["w"].astype(x.dtype)
+    return out, SSMCache(conv=xp[:, -(k - 1):].astype(cache.conv.dtype),
+                         ssm=ssm.astype(cache.ssm.dtype))

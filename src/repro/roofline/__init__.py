@@ -1,0 +1,12 @@
+"""Roofline analysis: collective parsing + 3-term model + report."""
+from repro.roofline.hlo_bytes import (CollectiveOp, collective_bytes,
+                                      parse_collectives)
+from repro.roofline.model import (V5E, Hardware, RooflineTerms,
+                                  model_flops_decode, model_flops_train,
+                                  roofline_terms)
+from repro.roofline.report import format_table, load_results, one_liner
+
+__all__ = ["CollectiveOp", "collective_bytes", "parse_collectives",
+           "V5E", "Hardware", "RooflineTerms", "roofline_terms",
+           "model_flops_train", "model_flops_decode", "format_table",
+           "load_results", "one_liner"]

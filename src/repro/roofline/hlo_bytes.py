@@ -1,0 +1,113 @@
+"""Collective-byte accounting from compiled (post-SPMD) HLO text.
+
+``cost_analysis()`` has no collective term, so we parse the partitioned
+module: every ``all-gather`` / ``all-reduce`` / ``reduce-scatter`` /
+``all-to-all`` / ``collective-permute`` instruction carries its result
+shape inline, e.g.::
+
+    %all-reduce.3 = f32[64,256]{1,0} all-reduce(%dot), replica_groups=...
+
+Per-op bytes-moved-per-device model (ring algorithms, the standard cost):
+
+  =====================  ==========================================
+  op                     bytes on the wire per device
+  =====================  ==========================================
+  all-gather             (g−1)/g · result_bytes   (receives all shards)
+  reduce-scatter         (g−1)/g · operand_bytes ≈ (g−1)/g · g·result
+  all-reduce             2 · (g−1)/g · result_bytes (RS + AG)
+  all-to-all             (g−1)/g · result_bytes
+  collective-permute     result_bytes
+  =====================  ==========================================
+
+where g = replica-group size parsed from ``replica_groups``.  Tuple-shaped
+collectives (variadic all-reduce) sum their element shapes.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List
+
+__all__ = ["CollectiveOp", "parse_collectives", "collective_bytes"]
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_OP_RE = re.compile(
+    r"=\s*((?:\([^)]*\))|(?:[a-z0-9]+\[[0-9,]*\][^ ]*))\s*"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(")
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+
+
+@dataclasses.dataclass(frozen=True)
+class CollectiveOp:
+    kind: str
+    result_bytes: int       # per-device result payload
+    group_size: int
+    wire_bytes: int         # modeled bytes on the wire per device
+
+
+def _shape_bytes(sig: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(sig):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _group_size(line: str, default: int) -> int:
+    m = _GROUPS_RE.search(line)
+    if m:                                   # iota form [groups, size]
+        return int(m.group(2))
+    m = _GROUPS_LIST_RE.search(line)
+    if m:                                   # explicit {{0,1,2,...},...}
+        return len([x for x in m.group(1).split(",") if x.strip() != ""])
+    return default
+
+
+def parse_collectives(hlo_text: str,
+                      default_group: int = 1) -> List[CollectiveOp]:
+    ops: List[CollectiveOp] = []
+    for line in hlo_text.splitlines():
+        m = _OP_RE.search(line)
+        if not m:
+            continue
+        sig, kind = m.group(1), m.group(2)
+        rb = _shape_bytes(sig)
+        g = _group_size(line, default_group)
+        frac = (g - 1) / g if g > 1 else 0.0
+        if kind == "all-reduce":
+            wire = int(2 * frac * rb)
+        elif kind == "reduce-scatter":
+            wire = int(frac * rb * g)       # operand = g × result
+        elif kind == "collective-permute":
+            wire = rb
+        else:                               # all-gather / all-to-all
+            wire = int(frac * rb)
+        ops.append(CollectiveOp(kind, rb, g, wire))
+    return ops
+
+
+def collective_bytes(hlo_text: str,
+                     default_group: int = 1) -> Dict[str, float]:
+    """Aggregate per-device collective traffic from compiled HLO text."""
+    ops = parse_collectives(hlo_text, default_group)
+    by_kind: Dict[str, float] = {}
+    for op in ops:
+        by_kind[op.kind] = by_kind.get(op.kind, 0) + op.wire_bytes
+    return {
+        "total_wire_bytes": float(sum(o.wire_bytes for o in ops)),
+        "n_ops": len(ops),
+        "by_kind": by_kind,
+    }

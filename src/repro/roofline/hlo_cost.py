@@ -1,0 +1,385 @@
+"""Loop-aware HLO cost walk — flops / HBM bytes / collective bytes.
+
+``compiled.cost_analysis()`` counts every computation ONCE: a
+scan-over-layers or microbatch loop body is weighted ×1 instead of
+×trip_count, so a 64-layer model looks 64× cheaper than it is.  This
+walker parses the post-SPMD HLO text and propagates **loop multiplicity**
+(`backend_config={"known_trip_count":{"n":...}}`) through the call graph:
+
+* **flops** — dot/convolution MACs ×2 (contraction size from operand
+  shapes), elementwise arithmetic, reduces; transcendentals tallied
+  separately;
+* **HBM bytes** — post-fusion traffic model: each *top-level* op's
+  operand+result bytes count; instructions inside a fusion are
+  register-resident and count 0 (their flops still count);
+* **collective wire bytes** — the :mod:`repro.roofline.hlo_bytes` per-op
+  ring model, ×multiplicity.
+
+The walk is exact on the module text — no model-shape assumptions — so
+the §Roofline "useful fraction" (6·N·D / HLO flops) genuinely catches
+remat and padding waste.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+__all__ = ["CostWalk", "walk_hlo"]
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+    "token": 0, "opaque": 0,
+}
+
+_COMP_HDR = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*\{\s*(?://.*)?$")
+_INSTR = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(\(.*?\)|[\w\[\],{}]+)\s*"
+    r"([\w\-]+)\((.*)$")
+_SHAPE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_TRIP = re.compile(r'"known_trip_count":\{"n":"?(\d+)"?')
+_CALLS = re.compile(r"(?:calls|to_apply|body)=%?([\w.\-]+)")
+_COND = re.compile(r"condition=%?([\w.\-]+)")
+_BRANCHES = re.compile(r"branch_computations=\{([^}]*)\}")
+_LHS_CONTRACT = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+_OPERAND = re.compile(r"%([\w.\-]+)")
+
+_ELEMENTWISE = {
+    "add", "subtract", "multiply", "divide", "maximum", "minimum", "abs",
+    "negate", "compare", "select", "and", "or", "xor", "not", "remainder",
+    "clamp", "floor", "ceil", "round-nearest-afz", "sign", "shift-left",
+    "shift-right-logical", "shift-right-arithmetic", "atan2",
+}
+_TRANSCENDENTAL = {"exponential", "log", "tanh", "rsqrt", "sqrt", "power",
+                   "logistic", "sine", "cosine", "expm1", "log1p", "erf",
+                   "cbrt"}
+_COLLECTIVES = {"all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute", "all-reduce-start", "all-gather-start",
+                "collective-permute-start"}
+_NO_BYTES = {"tuple", "get-tuple-element", "parameter", "constant",
+             "bitcast", "while", "conditional", "call", "after-all",
+             "iota", "partition-id", "replica-id"}
+
+
+def _shape_elems_bytes(sig: str) -> Tuple[int, int]:
+    """(element count, bytes) over all tensors in a (possibly tuple) sig."""
+    elems = 0
+    nbytes = 0
+    for dt, dims in _SHAPE.findall(sig):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        elems += n
+        nbytes += n * _DTYPE_BYTES[dt]
+    return elems, nbytes
+
+
+@dataclasses.dataclass
+class _Instr:
+    name: str
+    shape_sig: str
+    opcode: str
+    rest: str            # operand list + attrs (raw tail of the line)
+    elems: int
+    bytes_: int
+
+
+@dataclasses.dataclass
+class CostWalk:
+    flops: float = 0.0
+    transcendentals: float = 0.0
+    hbm_bytes: float = 0.0
+    wire_bytes: float = 0.0
+    collective_count: float = 0.0
+    wire_by_kind: Dict[str, float] = dataclasses.field(default_factory=dict)
+
+    def add(self, other: "CostWalk", mult: float = 1.0):
+        self.flops += other.flops * mult
+        self.transcendentals += other.transcendentals * mult
+        self.hbm_bytes += other.hbm_bytes * mult
+        self.wire_bytes += other.wire_bytes * mult
+        self.collective_count += other.collective_count * mult
+        for k, v in other.wire_by_kind.items():
+            self.wire_by_kind[k] = self.wire_by_kind.get(k, 0) + v * mult
+
+
+def _parse_computations(text: str) -> Dict[str, List[_Instr]]:
+    comps: Dict[str, List[_Instr]] = {}
+    cur: Optional[str] = None
+    entry: Optional[str] = None
+    for line in text.splitlines():
+        if cur is None:
+            m = _COMP_HDR.match(line.strip())
+            if m and "{" in line:
+                cur = m.group(1)
+                if line.startswith("ENTRY"):
+                    entry = cur
+                comps[cur] = []
+            continue
+        s = line.strip()
+        if s == "}":
+            cur = None
+            continue
+        m = _INSTR.match(line)
+        if not m:
+            continue
+        name, sig, opcode, rest = m.groups()
+        elems, nbytes = _shape_elems_bytes(sig)
+        comps[cur].append(_Instr(name, sig, opcode, rest, elems, nbytes))
+    if entry is not None:
+        comps["__entry__"] = comps[entry]
+    return comps
+
+
+def _group_size(rest: str, default: int) -> int:
+    m = re.search(r"replica_groups=\[(\d+),(\d+)\]", rest)
+    if m:
+        return int(m.group(2))
+    m = re.search(r"replica_groups=\{\{([^}]*)\}", rest)
+    if m:
+        return len([x for x in m.group(1).split(",") if x.strip()])
+    return default
+
+
+def _wire_bytes(kind: str, result_bytes: int, g: int) -> float:
+    frac = (g - 1) / g if g > 1 else 0.0
+    kind = kind.replace("-start", "")
+    if kind == "all-reduce":
+        return 2 * frac * result_bytes
+    if kind == "reduce-scatter":
+        return frac * result_bytes * g
+    if kind == "collective-permute":
+        return float(result_bytes)
+    return frac * result_bytes          # all-gather / all-to-all
+
+
+_SLICY = {"dynamic-slice", "gather", "slice"}
+#: zero-traffic pass-through ops the use-analysis traces through
+_PASS = {"bitcast", "copy", "reshape", "transpose", "convert"}
+
+
+def _param_effective_bytes(comp: List[_Instr], shapes: Dict[str, str]):
+    """Effective read bytes per parameter index of a fused computation.
+
+    A scan body's fusion takes the FULL stacked weight/cache tensor as
+    operand but only dynamic-slices one layer out of it (possibly through
+    bitcast/reshape chains) — the actual HBM read is the slice, not the
+    stack.  For each parameter whose (traced) uses are all slice-like,
+    return the summed slice-result bytes; if all uses are
+    dynamic-update-slice *destinations*, return the update payload (the
+    in-place write); otherwise None (= count the full operand).
+    """
+    params: Dict[int, str] = {}
+    for ins in comp:
+        if ins.opcode == "parameter":
+            m = re.match(r"(\d+)", ins.rest)
+            if m:
+                params[int(m.group(1))] = ins.name
+
+    def operand_names(ins):
+        return _OPERAND.findall(ins.rest.split(")")[0])
+
+    def real_uses(pname):
+        """Consumers of pname, traced through pass-through ops.
+        Returns list of (instr, via_name)."""
+        out = []
+        frontier = [pname]
+        seen = set()
+        while frontier:
+            nm = frontier.pop()
+            if nm in seen:
+                continue
+            seen.add(nm)
+            for ins in comp:
+                if nm in operand_names(ins):
+                    if ins.opcode in _PASS:
+                        frontier.append(ins.name)
+                    else:
+                        out.append((ins, nm))
+        return out
+
+    eff: Dict[int, Optional[int]] = {}
+    for idx, pname in params.items():
+        uses = real_uses(pname)
+        if not uses:
+            eff[idx] = None
+            continue
+        total = 0
+        ok = True
+        for u, via in uses:
+            if u.opcode in _SLICY:
+                total += u.bytes_                    # read: slice result
+            elif (u.opcode == "dynamic-update-slice"
+                  and operand_names(u) and operand_names(u)[0] == via):
+                ops = operand_names(u)               # write: update payload
+                if len(ops) >= 2 and ops[1] in shapes:
+                    total += _shape_elems_bytes(shapes[ops[1]])[1]
+                else:
+                    total += u.bytes_ // 4           # conservative fallback
+            else:
+                ok = False
+                break
+        eff[idx] = total if ok else None
+    return eff
+
+
+def walk_hlo(text: str, *, default_group: int = 1,
+             fusion_bytes_only: bool = True) -> CostWalk:
+    comps = _parse_computations(text)
+    memo: Dict[Tuple[str, bool], CostWalk] = {}
+    eff_memo: Dict[str, Dict[int, Optional[int]]] = {}
+
+    def shapes_in(comp: List[_Instr]) -> Dict[str, str]:
+        return {i.name: i.shape_sig for i in comp}
+
+    def fusion_read_bytes(called: str, operands: List[str],
+                          shapes: Dict[str, str]) -> int:
+        comp = comps.get(called, [])
+        if called not in eff_memo:
+            eff_memo[called] = _param_effective_bytes(
+                comp, shapes_in(comp))
+        eff = eff_memo[called]
+        total = 0
+        for i, opn in enumerate(operands):
+            if opn not in shapes:
+                continue
+            full = _shape_elems_bytes(shapes[opn])[1]
+            e = eff.get(i, None)
+            total += full if e is None else min(e, full)
+        return total
+
+    def fusion_write_bytes(called: str, own_bytes: int) -> int:
+        comp = comps.get(called, [])
+        by_name = {i.name: i for i in comp}
+        root = comp[-1] if comp else None
+        # trace through pass-through ops to the real root producer
+        hops = 0
+        while root is not None and root.opcode in _PASS and hops < 8:
+            ops = _OPERAND.findall(root.rest.split(")")[0])
+            root = by_name.get(ops[0]) if ops else None
+            hops += 1
+        if root is not None and root.opcode == "dynamic-update-slice":
+            ops = _OPERAND.findall(root.rest.split(")")[0])
+            sh = shapes_in(comp)
+            if len(ops) >= 2 and ops[1] in sh:
+                return _shape_elems_bytes(sh[ops[1]])[1]
+            return own_bytes // 4
+        return own_bytes
+
+    def cost_of(name: str, inside_fusion: bool) -> CostWalk:
+        key = (name, inside_fusion)
+        if key in memo:
+            return memo[key]
+        memo[key] = CostWalk()          # cycle guard
+        comp = comps.get(name, [])
+        shapes = shapes_in(comp)
+        out = CostWalk()
+        for ins in comp:
+            op = ins.opcode
+            operand_str = ins.rest.split(")")[0]
+            operands = _OPERAND.findall(operand_str)
+            # ---------- flops ----------
+            if op == "dot":
+                k = 1
+                mc = _LHS_CONTRACT.search(ins.rest)
+                if mc and operands and operands[0] in shapes:
+                    lhs_dims = _SHAPE.search(shapes[operands[0]])
+                    if lhs_dims:
+                        dims = [int(d) for d in
+                                lhs_dims.group(2).split(",") if d]
+                        for ci in mc.group(1).split(","):
+                            if ci and int(ci) < len(dims):
+                                k *= dims[int(ci)]
+                out.flops += 2.0 * ins.elems * max(k, 1)
+            elif op == "convolution":
+                out.flops += 2.0 * ins.elems  # lower bound (rare here)
+            elif op in _ELEMENTWISE:
+                out.flops += ins.elems
+            elif op in _TRANSCENDENTAL:
+                out.transcendentals += ins.elems
+                out.flops += ins.elems
+            elif op == "reduce" or op == "reduce-window":
+                opn = _OPERAND.search(ins.rest)
+                if opn and opn.group(1) in shapes:
+                    e, _ = _shape_elems_bytes(shapes[opn.group(1)])
+                    out.flops += e
+                else:
+                    out.flops += ins.elems
+            # ---------- bytes ----------
+            if not inside_fusion and op not in _NO_BYTES:
+                if op == "fusion":
+                    m = _CALLS.search(ins.rest)
+                    called = m.group(1) if m else ""
+                    out.hbm_bytes += (
+                        fusion_read_bytes(called, operands, shapes)
+                        + fusion_write_bytes(called, ins.bytes_))
+                elif op in _SLICY:
+                    out.hbm_bytes += 2 * ins.bytes_      # read + write slice
+                elif op == "dynamic-update-slice":
+                    upd = (2 * _shape_elems_bytes(shapes[operands[1]])[1]
+                           if len(operands) >= 2 and operands[1] in shapes
+                           else ins.bytes_)
+                    out.hbm_bytes += upd
+                else:
+                    opd_bytes = 0
+                    for opn in operands:
+                        if opn in shapes:
+                            _, b = _shape_elems_bytes(shapes[opn])
+                            opd_bytes += b
+                    out.hbm_bytes += ins.bytes_ + opd_bytes
+            # ---------- collectives ----------
+            if op in _COLLECTIVES:
+                g = _group_size(ins.rest, default_group)
+                w = _wire_bytes(op, ins.bytes_, g)
+                out.wire_bytes += w
+                out.collective_count += 1
+                kk = op.replace("-start", "")
+                out.wire_by_kind[kk] = out.wire_by_kind.get(kk, 0) + w
+            # ---------- called computations ----------
+            if op == "fusion":
+                m = _CALLS.search(ins.rest)
+                if m:
+                    out.add(cost_of(m.group(1),
+                                    inside_fusion or fusion_bytes_only))
+            elif op == "while":
+                trip = 1
+                mt = _TRIP.search(ins.rest)
+                if mt:
+                    trip = int(mt.group(1))
+                mb = re.search(r"body=%?([\w.\-]+)", ins.rest)
+                mc2 = _COND.search(ins.rest)
+                if mb:
+                    out.add(cost_of(mb.group(1), inside_fusion), trip)
+                if mc2:
+                    out.add(cost_of(mc2.group(1), inside_fusion), trip + 1)
+            elif op == "conditional":
+                mb = _BRANCHES.search(ins.rest)
+                if mb:
+                    branches = [b.strip().lstrip("%") for b in
+                                mb.group(1).split(",") if b.strip()]
+                    costs = [cost_of(b, inside_fusion) for b in branches]
+                    if costs:               # max-cost branch executes
+                        out.add(max(costs, key=lambda c: c.flops))
+                else:
+                    for attr in ("true_computation", "false_computation"):
+                        m = re.search(attr + r"=%?([\w.\-]+)", ins.rest)
+                        if m:
+                            out.add(cost_of(m.group(1), inside_fusion), 0.5)
+            elif op in ("call", "custom-call", "reduce", "sort", "scatter",
+                        "select-and-scatter", "map", "reduce-window"):
+                m = _CALLS.search(ins.rest)
+                if m and m.group(1) in comps and op != "custom-call":
+                    # tiny scalar computations (add for reduce) — cheap but
+                    # scale by output elems for map-like ops
+                    sub = cost_of(m.group(1), True)
+                    out.add(sub, max(ins.elems, 1)
+                            if op in ("map",) else 1.0)
+        memo[key] = out
+        return out
+
+    return cost_of("__entry__", False)

@@ -1,0 +1,112 @@
+"""Three-term roofline model over TPU v5e constants.
+
+    compute    = HLO_FLOPs / peak_FLOP/s          (per device)
+    memory     = HLO_bytes / HBM_bw               (per device)
+    collective = wire_bytes / (links × link_bw)   (per device)
+
+``cost_analysis()`` on the partitioned module already reports per-device
+FLOPs/bytes, so no further division by chip count is needed; the
+collective term divides by the ICI links a v5e chip drives (4, 2D torus).
+MODEL_FLOPS = 6·N·D (dense; N_active for MoE) gives the useful-compute
+ratio that catches remat/redundancy waste.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+__all__ = ["V5E", "Hardware", "RooflineTerms", "roofline_terms",
+           "model_flops_train", "model_flops_decode"]
+
+
+@dataclasses.dataclass(frozen=True)
+class Hardware:
+    name: str
+    peak_bf16_flops: float       # per chip
+    hbm_bw: float                # bytes/s per chip
+    ici_link_bw: float           # bytes/s per link
+    ici_links: int               # links per chip
+    hbm_bytes: float             # capacity per chip
+
+    def peak_flops(self, dtype: str = "bf16") -> float:
+        scale = {"bf16": 1.0, "f32": 0.5, "fp32": 0.5,
+                 "f64": 1 / 400, "fp64": 1 / 400}.get(dtype, 1.0)
+        return self.peak_bf16_flops * scale
+
+
+#: TPU v5e (assignment constants: 197 TFLOP/s bf16, 819 GB/s HBM,
+#: ~50 GB/s/link ICI; fp64 is software-emulated — documented assumption).
+V5E = Hardware(name="tpu_v5e", peak_bf16_flops=197e12, hbm_bw=819e9,
+               ici_link_bw=50e9, ici_links=4, hbm_bytes=16e9)
+
+
+@dataclasses.dataclass(frozen=True)
+class RooflineTerms:
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    flops: float                 # per-device HLO flops
+    hbm_bytes: float             # per-device HLO bytes accessed
+    wire_bytes: float            # per-device collective bytes
+    model_flops: Optional[float] = None   # 6·N·D useful flops (global)
+    chips: int = 1
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def bound_s(self) -> float:
+        """Roofline step time (max of the three overlappable terms)."""
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def useful_fraction(self) -> Optional[float]:
+        """MODEL_FLOPS / (chips × HLO_FLOPs): how much compiled compute is
+        useful (remat/padding/redundancy show up here)."""
+        if self.model_flops is None or self.flops == 0:
+            return None
+        return self.model_flops / (self.chips * self.flops)
+
+    @property
+    def mfu_at_roofline(self) -> Optional[float]:
+        """Model FLOPs utilization if the step ran at its roofline bound."""
+        if self.model_flops is None or self.bound_s == 0:
+            return None
+        per_chip = self.model_flops / self.chips
+        return per_chip / (self.bound_s * V5E.peak_bf16_flops)
+
+    def as_dict(self) -> Dict:
+        return {
+            "compute_s": self.compute_s, "memory_s": self.memory_s,
+            "collective_s": self.collective_s, "dominant": self.dominant,
+            "flops": self.flops, "hbm_bytes": self.hbm_bytes,
+            "wire_bytes": self.wire_bytes, "model_flops": self.model_flops,
+            "useful_fraction": self.useful_fraction,
+            "mfu_at_roofline": self.mfu_at_roofline, "chips": self.chips,
+        }
+
+
+def roofline_terms(cost: Dict, wire_bytes: float, *, hw: Hardware = V5E,
+                   dtype: str = "bf16", chips: int = 1,
+                   model_flops: Optional[float] = None) -> RooflineTerms:
+    flops = float(cost.get("flops", 0.0))
+    hbm = float(cost.get("bytes accessed", 0.0))
+    return RooflineTerms(
+        compute_s=flops / hw.peak_flops(dtype),
+        memory_s=hbm / hw.hbm_bw,
+        collective_s=wire_bytes / (hw.ici_links * hw.ici_link_bw),
+        flops=flops, hbm_bytes=hbm, wire_bytes=wire_bytes,
+        model_flops=model_flops, chips=chips)
+
+
+def model_flops_train(n_params: int, n_tokens: int) -> float:
+    """6·N·D — fwd+bwd useful flops for one step over n_tokens."""
+    return 6.0 * n_params * n_tokens
+
+
+def model_flops_decode(n_params: int, batch: int) -> float:
+    """2·N per generated token (fwd only), × batch."""
+    return 2.0 * n_params * batch

@@ -1,0 +1,156 @@
+"""Batched decode engine — slot-based continuous batching.
+
+A fixed pool of ``batch_slots`` request slots decodes in lock-step (one
+jitted ``serve_step`` per tick, all families); slots are *ragged*: each
+carries its own position (``attn_decode`` takes per-slot ``pos``), so a
+new request can join mid-flight.  Admission prefills the prompt into the
+slot's cache (a ``lax.scan`` of decode steps over a batch-1 view — other
+slots' state is untouched), then the slot participates in the shared tick.
+
+Sampling: greedy or temperature, per-slot PRNG.  EOS or ``max_new`` frees
+the slot.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import encdec
+from repro.models.api import decode_step, init_cache
+from repro.models.config import ModelConfig
+from repro.serve.kv_cache import slot_insert, slot_view
+
+__all__ = ["EngineConfig", "DecodeEngine"]
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineConfig:
+    batch_slots: int = 8
+    max_len: int = 1024
+    temperature: float = 0.0          # 0 = greedy
+    eos_token: int = -1               # -1: never
+    cache_dtype: str = "bfloat16"
+    seed: int = 0
+
+
+class DecodeEngine:
+    def __init__(self, cfg: ModelConfig, params, ecfg: EngineConfig):
+        self.cfg = cfg
+        self.params = params
+        self.ecfg = ecfg
+        B = ecfg.batch_slots
+        self.cache = init_cache(cfg, B, ecfg.max_len,
+                                dtype=jnp.dtype(ecfg.cache_dtype))
+        self.pos = np.zeros(B, np.int32)
+        self.active = np.zeros(B, bool)
+        self.tokens = np.zeros(B, np.int32)
+        self.outputs: List[List[int]] = [[] for _ in range(B)]
+        self.max_new = np.zeros(B, np.int32)
+        self.generated = np.zeros(B, np.int32)
+        self.key = jax.random.PRNGKey(ecfg.seed)
+        self._tick = self._build_tick()
+        self._prefill = self._build_prefill()
+
+    # ------------------------------------------------------------- jitted
+    def _build_tick(self):
+        cfg, ecfg = self.cfg, self.ecfg
+
+        @jax.jit
+        def tick(params, cache, tokens, pos, active, key):
+            logits, new_cache = decode_step(params, cfg, cache, tokens, pos)
+            if ecfg.temperature > 0.0:
+                nxt = jax.random.categorical(
+                    key, logits / ecfg.temperature, axis=-1)
+            else:
+                nxt = jnp.argmax(logits, axis=-1)
+            nxt = nxt.astype(jnp.int32)
+            # Frozen slots keep their token and cache row untouched is not
+            # needed: their pos does not advance, so next tick overwrites
+            # the same cache slot — harmless and branch-free.
+            nxt = jnp.where(active, nxt, tokens)
+            new_pos = jnp.where(active, pos + 1, pos)
+            return nxt, new_pos, new_cache
+
+        return tick
+
+    def _build_prefill(self):
+        cfg = self.cfg
+
+        @jax.jit
+        def prefill(params, slot_cache, prompt):      # prompt [P] int32
+            def step(carry, tok):
+                c, p = carry
+                logits, c = decode_step(params, cfg, c, tok[None], p)
+                return (c, p + 1), logits
+
+            (c, p), logits = jax.lax.scan(
+                step, (slot_cache, jnp.zeros((1,), jnp.int32)), prompt)
+            return c, p[0], logits[-1, 0]
+
+        return prefill
+
+    # ------------------------------------------------------------- public
+    def add_request(self, prompt: List[int], max_new: int = 32,
+                    audio_embeds: Optional[jax.Array] = None,
+                    patch_embeds=None) -> int:
+        """Admit a request into a free slot; returns the slot id."""
+        free = np.flatnonzero(~self.active)
+        if free.size == 0:
+            raise RuntimeError("no free slots")
+        s = int(free[0])
+        slot = slot_view(self.cache, s)
+        if self.cfg.encoder is not None:
+            assert audio_embeds is not None, "audio arch needs embeddings"
+            enc = encdec.encode(self.params, self.cfg, audio_embeds[None])
+            ck, cv = encdec.prefill_cross(self.params, self.cfg, enc)
+            slot = dict(slot)
+            slot["cross_k"], slot["cross_v"] = (
+                ck.astype(slot["cross_k"].dtype),
+                cv.astype(slot["cross_v"].dtype))
+        slot, pos, logits = self._prefill(
+            self.params, slot, jnp.asarray(prompt, jnp.int32))
+        self.cache = slot_insert(self.cache, slot, s)
+        self.pos[s] = int(pos)
+        first = int(jnp.argmax(logits))
+        self.tokens[s] = first
+        self.outputs[s] = [first]
+        self.active[s] = True
+        self.max_new[s] = max_new
+        self.generated[s] = 1
+        return s
+
+    def step(self) -> Dict[int, int]:
+        """One synchronized decode tick; returns {slot: new_token}."""
+        if not self.active.any():
+            return {}
+        self.key, sub = jax.random.split(self.key)
+        nxt, new_pos, self.cache = self._tick(
+            self.params, self.cache, jnp.asarray(self.tokens),
+            jnp.asarray(self.pos), jnp.asarray(self.active), sub)
+        nxt = np.array(nxt)                   # copies: keep host state mutable
+        self.pos = np.array(new_pos)
+        out = {}
+        for s in np.flatnonzero(self.active):
+            t = int(nxt[s])
+            self.tokens[s] = t
+            self.outputs[s].append(t)
+            self.generated[s] += 1
+            out[int(s)] = t
+            done = (t == self.ecfg.eos_token
+                    or self.generated[s] >= self.max_new[s]
+                    or self.pos[s] >= self.ecfg.max_len - 1)
+            if done:
+                self.active[s] = False
+        return out
+
+    def run_to_completion(self, max_ticks: int = 10_000):
+        ticks = 0
+        while self.active.any() and ticks < max_ticks:
+            self.step()
+            ticks += 1
+        return self.outputs

@@ -1,0 +1,48 @@
+"""KV/state-cache accounting + per-slot views.
+
+The cache *structures* live with the models (``AttnCache``/``SSMCache``,
+``models.api.init_cache``); this module adds what the serving layer needs:
+
+* byte accounting per request slot (capacity planning / roofline inputs —
+  decode is memory-bound on exactly these bytes);
+* single-slot extract/insert (every cache leaf carries batch on axis 1,
+  so one rule serves attention, SSM, hybrid and enc-dec caches) — used by
+  the engine to prefill one request without touching live slots.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.api import init_cache
+from repro.models.config import ModelConfig
+
+__all__ = ["cache_bytes", "bytes_per_slot", "slot_view", "slot_insert",
+           "init_cache"]
+
+
+def cache_bytes(cache) -> int:
+    return sum(l.size * l.dtype.itemsize
+               for l in jax.tree_util.tree_leaves(cache))
+
+
+def bytes_per_slot(cfg: ModelConfig, max_len: int,
+                   dtype=jnp.bfloat16) -> int:
+    """Cache bytes one request slot holds at context ``max_len``."""
+    shapes = jax.eval_shape(lambda: init_cache(cfg, 1, max_len, dtype))
+    return sum(int(jnp.prod(jnp.asarray(l.shape))) * l.dtype.itemsize
+               for l in jax.tree_util.tree_leaves(shapes))
+
+
+def slot_view(cache, slot: int):
+    """Extract a batch=1 view of request ``slot`` (batch is axis 1)."""
+    return jax.tree_util.tree_map(
+        lambda a: jax.lax.dynamic_slice_in_dim(a, slot, 1, axis=1), cache)
+
+
+def slot_insert(cache, slot_cache, slot: int):
+    """Write a batch=1 slot cache back into the batched cache."""
+    return jax.tree_util.tree_map(
+        lambda a, u: jax.lax.dynamic_update_slice_in_dim(a, u.astype(a.dtype),
+                                                         slot, axis=1),
+        cache, slot_cache)

@@ -1,0 +1,125 @@
+"""Int8-quantized KV cache — the paper's Mix-V3 principle, one tier
+further down the serving stack.
+
+Callipepla stores the *streamed operand* (the sparse matrix) one
+precision tier below the iterate and casts in-register (§6).  Decode is
+the same regime: the KV cache is the streamed operand (memory term =
+cache bytes / HBM bw, §Roofline), the query/output are the "iterate".
+So: store K/V **int8 with one scale per (batch, head, position)**,
+dequantize in-register at the score/output einsums, keep q and softmax at
+bf16/fp32.  Cache bytes halve vs bf16 ⇒ the decode memory roofline
+halves, exactly as Mix-V3 halves the SpMV stream.
+
+Accuracy: per-position scales are the KV-quant standard (row-wise
+absmax); `tests/test_quant_cache.py` bounds the decode error vs the bf16
+reference and checks end-to-end argmax agreement.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.attention import _NEG, _split_heads
+from repro.models.layers import apply_rope, dense, rope_freqs
+
+__all__ = ["QuantAttnCache", "init_quant_cache", "attn_decode_quant",
+           "quantize_kv", "dequantize_kv"]
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantAttnCache:
+    """Head-major int8 KV cache: values [B, Hk, T, D] i8 + per-(b,h,t)
+    scales.  ``ring`` static, as in AttnCache."""
+    k: jax.Array           # int8 [B, Hk, T, D]
+    v: jax.Array           # int8 [B, Hk, T, D]
+    k_scale: jax.Array     # f32 [B, Hk, T]
+    v_scale: jax.Array     # f32 [B, Hk, T]
+    ring: bool
+
+
+jax.tree_util.register_dataclass(
+    QuantAttnCache, data_fields=["k", "v", "k_scale", "v_scale"],
+    meta_fields=["ring"])
+
+
+def init_quant_cache(batch: int, length: int, n_kv_heads: int,
+                     head_dim: int, *, ring: bool = False) -> QuantAttnCache:
+    shape = (batch, n_kv_heads, length, head_dim)
+    return QuantAttnCache(
+        k=jnp.zeros(shape, jnp.int8), v=jnp.zeros(shape, jnp.int8),
+        k_scale=jnp.zeros(shape[:3], jnp.float32),
+        v_scale=jnp.zeros(shape[:3], jnp.float32), ring=ring)
+
+
+def quantize_kv(x: jax.Array):
+    """x [..., D] -> (int8 values, f32 scale over the last dim)."""
+    absmax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1)
+    scale = jnp.maximum(absmax, 1e-8) / 127.0
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale[..., None]),
+                 -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_kv(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale[..., None]
+
+
+def attn_decode_quant(p, x: jax.Array, cache: QuantAttnCache,
+                      pos: jax.Array, *, n_heads: int, n_kv_heads: int,
+                      head_dim: int, window: Optional[int] = None,
+                      rope_theta: float = 10_000.0):
+    """One-token decode against the int8 cache.
+
+    Same contract as ``attn_decode``; the dequantize happens in-register
+    at the einsum (the Mix-V3 cast point).  Returns (y, new cache).
+    """
+    b = x.shape[0]
+    length = cache.k.shape[2]
+    q = _split_heads(dense(p["wq"], x), n_heads, head_dim)
+    k = _split_heads(dense(p["wk"], x), n_kv_heads, head_dim)
+    v = _split_heads(dense(p["wv"], x), n_kv_heads, head_dim)
+
+    pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (b,))
+    cos, sin = rope_freqs(pos[:, None], head_dim, rope_theta)
+    q = apply_rope(q, cos, sin)
+    k = apply_rope(k, cos, sin)
+
+    slot = pos % length if cache.ring else pos
+    bidx = jnp.arange(b)[:, None]
+    hidx = jnp.arange(n_kv_heads)[None, :]
+    kq, ks = quantize_kv(k[:, 0])            # [B,Hk,D] i8, [B,Hk] f32
+    vq, vs = quantize_kv(v[:, 0])
+    ck = cache.k.at[bidx, hidx, slot[:, None]].set(kq)
+    cv = cache.v.at[bidx, hidx, slot[:, None]].set(vq)
+    cks = cache.k_scale.at[bidx, hidx, slot[:, None]].set(ks)
+    cvs = cache.v_scale.at[bidx, hidx, slot[:, None]].set(vs)
+
+    # scores: (q · k_i8) * scale_i — the scale factors out of the dot, so
+    # the int8 payload is the only per-position stream
+    g = n_heads // n_kv_heads
+    qg = q.reshape(b, 1, n_kv_heads, g, head_dim).astype(jnp.float32)
+    sc = jnp.einsum("bshgd,bhtd->bhgst", qg, ck.astype(jnp.float32))
+    sc = sc * cks[:, :, None, None, :]               # [B,Hk,g,1,T]
+    scores = sc.reshape(b, n_heads, 1, length) * (head_dim ** -0.5)
+
+    j = jnp.arange(length)[None, :]
+    pb = pos[:, None]
+    if cache.ring:
+        valid = jnp.where(pb >= length, jnp.ones((b, length), bool),
+                          j <= pb)
+    else:
+        valid = j <= pb
+        if window is not None:
+            valid &= j > pb - window
+    scores = jnp.where(valid[:, None, None, :], scores, _NEG)
+    w = jax.nn.softmax(scores, axis=-1)              # fp32
+
+    wg = w.reshape(b, n_kv_heads, g, 1, length)
+    wv = wg * cvs[:, :, None, None, :]               # fold scale into w
+    o = jnp.einsum("bhgst,bhtd->bshgd", wv, cv.astype(jnp.float32))
+    o = o.reshape(b, 1, n_heads * head_dim).astype(x.dtype)
+    y = dense(p["wo"], o)
+    return y, QuantAttnCache(ck, cv, cks, cvs, cache.ring)

@@ -1,0 +1,32 @@
+"""Sparse-matrix substrate for the Callipepla-JAX solver stack.
+
+Formats:
+  * :mod:`repro.sparse.csr`      — host-side CSR container + reference ops.
+  * :mod:`repro.sparse.bell`     — banked-ELL ("streams") format: the TPU
+    adaptation of Serpens'/Callipepla's per-channel packed nonzero streams.
+  * :mod:`repro.sparse.mtx`      — MatrixMarket I/O (SuiteSparse-compatible).
+  * :mod:`repro.sparse.generators` — synthetic SPD problem generators that
+    cover the regimes of the paper's Table 3 benchmark suite.
+  * :mod:`repro.sparse.partition` — row-block partitioning for multi-chip CG.
+"""
+from repro.sparse.csr import CSRMatrix, csr_from_coo, csr_to_dense, csr_spmv
+from repro.sparse.bell import BellMatrix, csr_to_bell, bell_spmv_reference
+from repro.sparse.generators import (
+    poisson_2d,
+    poisson_3d,
+    random_spd,
+    diag_dominant_spd,
+    tridiagonal_spd,
+    benchmark_suite,
+)
+from repro.sparse.mtx import read_mtx, write_mtx
+from repro.sparse.partition import partition_rows, PartitionedMatrix
+
+__all__ = [
+    "CSRMatrix", "csr_from_coo", "csr_to_dense", "csr_spmv",
+    "BellMatrix", "csr_to_bell", "bell_spmv_reference",
+    "poisson_2d", "poisson_3d", "random_spd", "diag_dominant_spd",
+    "tridiagonal_spd", "benchmark_suite",
+    "read_mtx", "write_mtx",
+    "partition_rows", "PartitionedMatrix",
+]

@@ -1,0 +1,11 @@
+"""Training substrate: optimizers, CGGN, loop, data, checkpoint, fault."""
+from repro.train.cggn import CGGNConfig, CGGNState, cggn_init, cggn_update
+from repro.train.data import DataConfig, SyntheticLM
+from repro.train.loop import Trainer, TrainerConfig, make_train_step
+from repro.train.optim import (AdamWConfig, adamw_init, adamw_update,
+                               cosine_schedule)
+
+__all__ = ["AdamWConfig", "adamw_init", "adamw_update", "cosine_schedule",
+           "CGGNConfig", "CGGNState", "cggn_init", "cggn_update",
+           "DataConfig", "SyntheticLM", "Trainer", "TrainerConfig",
+           "make_train_step"]

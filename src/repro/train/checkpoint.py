@@ -1,0 +1,159 @@
+"""Atomic, versioned, mesh-independent checkpoints.
+
+Layout (one directory per step)::
+
+    <root>/step_000123.tmp/      # staged write
+        arrays.npz               # every leaf, host numpy, full (unsharded)
+        manifest.json            # treedef, shapes/dtypes, sha256, metadata
+    <root>/step_000123/          # atomic os.replace on success
+
+Guarantees:
+* **atomic** — a crash mid-write leaves only ``*.tmp``; ``latest_step``
+  ignores them, ``restore`` never sees a torn checkpoint;
+* **verified** — the manifest stores a sha256 over the array payload;
+  mismatch raises instead of resuming silently corrupt state;
+* **mesh-independent** — leaves are saved *unsharded* with their logical
+  shapes, so a restart may use a different (data, model) factorization or
+  device count: ``restore(..., shardings=...)`` re-shards on load (elastic
+  re-mesh, tested save(mesh A) → restore(mesh B));
+* **complete** — params, optimizer state, data cursor, and RNG key all
+  live in one tree: resume is bitwise deterministic on CPU.
+
+(At real pod scale the npz payload would be a tensorstore/OCDBT spec per
+shard; the atomicity/versioning/manifest logic here is the part that
+carries over unchanged.)
+"""
+from __future__ import annotations
+
+import hashlib
+import io
+import json
+import os
+import re
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["save", "restore", "latest_step", "list_steps"]
+
+_STEP_RE = re.compile(r"^step_(\d{9})$")
+
+
+def _flatten_with_names(tree):
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    return {"/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                     for k in path): leaf for path, leaf in flat}
+
+
+def save(root: str, step: int, tree: Any,
+         metadata: Optional[Dict] = None) -> str:
+    """Stage + atomically publish one checkpoint.  Returns final path."""
+    os.makedirs(root, exist_ok=True)
+    name = f"step_{step:09d}"
+    tmp = os.path.join(root, name + ".tmp")
+    final = os.path.join(root, name)
+    os.makedirs(tmp, exist_ok=True)
+
+    named = _flatten_with_names(tree)
+    arrays = {}
+    dtypes = {}
+    for k, v in named.items():
+        a = np.asarray(v)
+        dtypes[k] = str(a.dtype)
+        if a.dtype == jnp.bfloat16:          # numpy can't serialize bf16
+            a = a.view(np.uint16)
+        arrays[k] = a
+    buf = io.BytesIO()
+    np.savez(buf, **arrays)
+    payload = buf.getvalue()
+    digest = hashlib.sha256(payload).hexdigest()
+    with open(os.path.join(tmp, "arrays.npz"), "wb") as f:
+        f.write(payload)
+
+    treedef = jax.tree_util.tree_structure(tree)
+    manifest = {
+        "step": step,
+        "sha256": digest,
+        "treedef": str(treedef),
+        "leaves": {k: {"shape": list(a.shape), "dtype": dtypes[k]}
+                   for k, a in arrays.items()},
+        "metadata": metadata or {},
+    }
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+
+    if os.path.exists(final):                    # idempotent re-save
+        import shutil
+        shutil.rmtree(final)
+    os.replace(tmp, final)                       # the atomic publish
+    return final
+
+
+def list_steps(root: str):
+    if not os.path.isdir(root):
+        return []
+    out = []
+    for d in os.listdir(root):
+        m = _STEP_RE.match(d)
+        if m and os.path.isfile(os.path.join(root, d, "manifest.json")):
+            out.append(int(m.group(1)))
+    return sorted(out)
+
+
+def latest_step(root: str) -> Optional[int]:
+    steps = list_steps(root)
+    return steps[-1] if steps else None
+
+
+def restore(root: str, template: Any, step: Optional[int] = None,
+            shardings: Any = None):
+    """Load a checkpoint into ``template``'s structure.
+
+    ``shardings`` (optional pytree of NamedSharding, possibly for a
+    DIFFERENT mesh than the one that saved) re-shards each leaf on load —
+    the elastic re-mesh path.  Returns (tree, metadata).
+    """
+    step = latest_step(root) if step is None else step
+    if step is None:
+        raise FileNotFoundError(f"no checkpoints under {root}")
+    path = os.path.join(root, f"step_{step:09d}")
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    with open(os.path.join(path, "arrays.npz"), "rb") as f:
+        payload = f.read()
+    digest = hashlib.sha256(payload).hexdigest()
+    if digest != manifest["sha256"]:
+        raise IOError(f"checkpoint {path} payload hash mismatch "
+                      f"({digest[:12]} != {manifest['sha256'][:12]})")
+    arrays = np.load(io.BytesIO(payload))
+
+    named = _flatten_with_names(template)
+    leaves_out = {}
+    for k, ref in named.items():
+        if k not in arrays:
+            raise KeyError(f"checkpoint missing leaf {k!r}")
+        a = arrays[k]
+        saved_dtype = manifest["leaves"][k]["dtype"]
+        if saved_dtype == "bfloat16":
+            import ml_dtypes
+            a = a.view(ml_dtypes.bfloat16)
+        if tuple(a.shape) != tuple(jnp.shape(ref)):
+            raise ValueError(f"leaf {k!r} shape {a.shape} != template "
+                             f"{jnp.shape(ref)}")
+        leaves_out[k] = a
+
+    flat_t = jax.tree_util.tree_flatten_with_path(template)
+    paths = ["/".join(str(getattr(kk, "key", getattr(kk, "idx", kk)))
+                      for kk in p) for p, _ in flat_t[0]]
+    ordered = [leaves_out[p] for p in paths]
+    if shardings is not None:
+        shard_leaves = jax.tree_util.tree_leaves(
+            shardings, is_leaf=lambda s: hasattr(s, "spec"))
+        ordered = [jax.device_put(a, s)
+                   for a, s in zip(ordered, shard_leaves)]
+    else:
+        ordered = [jnp.asarray(a) for a in ordered]
+    tree = jax.tree_util.tree_unflatten(flat_t[1], ordered)
+    return tree, manifest["metadata"]

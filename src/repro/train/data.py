@@ -1,0 +1,75 @@
+"""Deterministic synthetic LM data pipeline with an explicit cursor.
+
+Production data loaders are stateful; fault tolerance demands the state be
+*checkpointable and exact*.  Here the pipeline is a pure function of
+``(seed, step)`` — ``batch_at(step)`` — so the "cursor" in a checkpoint is
+just the step integer, restarts are bitwise reproducible, and elastic
+re-meshes need no loader coordination (DESIGN.md §5).
+
+Two sources:
+* ``markov``  — an order-1 Markov chain over the vocab with a banded
+  transition kernel: enough structure that a ~100M model visibly learns
+  (examples/train driver), zero I/O.
+* ``uniform`` — i.i.d. tokens (pure-throughput benchmarking).
+
+Labels are next-token shifted; the final position predicts token 0 (BOS).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["DataConfig", "SyntheticLM"]
+
+
+@dataclasses.dataclass(frozen=True)
+class DataConfig:
+    vocab: int
+    seq_len: int
+    global_batch: int
+    seed: int = 0
+    source: str = "markov"        # "markov" | "uniform"
+    band: int = 16                # markov: next token within +-band of prev
+
+
+class SyntheticLM:
+    """Stateless-per-step synthetic token stream."""
+
+    def __init__(self, cfg: DataConfig):
+        self.cfg = cfg
+        self._root = jax.random.PRNGKey(cfg.seed)
+
+    def batch_at(self, step: int) -> Dict[str, jax.Array]:
+        cfg = self.cfg
+        key = jax.random.fold_in(self._root, step)
+        if cfg.source == "uniform":
+            toks = jax.random.randint(
+                key, (cfg.global_batch, cfg.seq_len), 0, cfg.vocab, jnp.int32)
+        elif cfg.source == "markov":
+            k0, kw = jax.random.split(key)
+            start = jax.random.randint(k0, (cfg.global_batch,), 0, cfg.vocab)
+            steps = jax.random.randint(
+                kw, (cfg.global_batch, cfg.seq_len - 1), -cfg.band,
+                cfg.band + 1)
+
+            def walk(tok, d):
+                nxt = (tok + d) % cfg.vocab
+                return nxt, nxt
+
+            _, rest = jax.lax.scan(walk, start, steps.T)
+            toks = jnp.concatenate([start[:, None], rest.T],
+                                   axis=1).astype(jnp.int32)
+        else:
+            raise ValueError(f"unknown source {cfg.source!r}")
+        labels = jnp.concatenate(
+            [toks[:, 1:], jnp.zeros((cfg.global_batch, 1), jnp.int32)],
+            axis=1)
+        return {"tokens": toks, "labels": labels}
+
+    def cursor(self, step: int) -> Dict[str, int]:
+        """Checkpointable loader state — the step is the whole cursor."""
+        return {"seed": self.cfg.seed, "step": step,
+                "source": self.cfg.source}

@@ -1,0 +1,86 @@
+"""Fault tolerance — straggler watchdog, retries, elastic re-mesh.
+
+At 1000+ nodes the failure model is: (a) slow steps (stragglers —
+network/preemption), (b) lost workers (restart from checkpoint), and
+(c) changed topology on restart (elastic re-mesh).  The pieces here:
+
+* :class:`StepWatchdog` — per-step wall-clock deadline.  A breach is
+  recorded and (policy) either logged-and-continued or escalated after
+  ``max_breaches`` consecutive slow steps (on a real cluster: trigger
+  re-dispatch; here: raise ``StragglerError`` so the driver can restart
+  from the last checkpoint — exercised in tests).
+* :func:`with_retries` — wraps a step with bounded retries for transient
+  faults (the injected-fault tests use this path).
+* :func:`elastic_restore` — restore a checkpoint onto a DIFFERENT mesh:
+  checkpoints are mesh-independent (full logical arrays + named-axis
+  specs), so only the re-sharding changes.
+"""
+from __future__ import annotations
+
+import contextlib
+import time
+from typing import Any, Callable, Optional
+
+import jax
+
+from repro.distributed.sharding import named_shardings, param_specs
+from repro.train import checkpoint as ckpt
+
+__all__ = ["StragglerError", "StepWatchdog", "with_retries",
+           "elastic_restore"]
+
+
+class StragglerError(RuntimeError):
+    """Raised after too many consecutive deadline breaches."""
+
+
+class StepWatchdog:
+    def __init__(self, deadline_s: Optional[float],
+                 max_breaches: int = 3):
+        self.deadline_s = deadline_s
+        self.max_breaches = max_breaches
+        self.breaches = 0
+        self.consecutive = 0
+        self.slow_steps = []
+
+    @contextlib.contextmanager
+    def guard(self, step: int):
+        t0 = time.monotonic()
+        yield
+        dt = time.monotonic() - t0
+        if self.deadline_s is not None and dt > self.deadline_s:
+            self.breaches += 1
+            self.consecutive += 1
+            self.slow_steps.append((step, dt))
+            if self.consecutive >= self.max_breaches:
+                raise StragglerError(
+                    f"{self.consecutive} consecutive steps over the "
+                    f"{self.deadline_s}s deadline (last: {dt:.2f}s at "
+                    f"step {step})")
+        else:
+            self.consecutive = 0
+
+
+def with_retries(fn: Callable, *args, retries: int = 2,
+                 retry_on=(RuntimeError,), on_retry: Callable = None,
+                 **kwargs):
+    """Run ``fn`` with bounded retries on transient faults."""
+    last = None
+    for attempt in range(retries + 1):
+        try:
+            return fn(*args, **kwargs)
+        except retry_on as e:          # noqa: PERF203
+            last = e
+            if on_retry is not None:
+                on_retry(attempt, e)
+    raise last
+
+
+def elastic_restore(root: str, template: Any, new_mesh, *,
+                    step: Optional[int] = None):
+    """Restore params (and anything mirroring their structure) onto
+    ``new_mesh`` — the saved mesh's factorization is irrelevant because
+    leaves are stored unsharded (checkpoint.py)."""
+    specs = param_specs(template, new_mesh)
+    shardings = named_shardings(specs, new_mesh)
+    return ckpt.restore(root, template, step=step, shardings=shardings)

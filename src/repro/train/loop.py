@@ -1,0 +1,180 @@
+"""Train-step builder + host training loop (checkpoint / fault hooks).
+
+``make_train_step`` returns one jitted function
+
+    train_step(params, opt_state, batch, step) -> (params', opt_state',
+                                                   metrics)
+
+with: microbatch gradient accumulation (a ``lax.scan`` over the leading
+batch split — the global_batch=256 shapes run as k microbatches), fp32
+loss/grad math over bf16 compute, AdamW with bf16 moment storage, explicit
+in/out shardings from :mod:`repro.distributed.sharding`, and donated
+params/opt-state (the framework-level double-channel ping-pong: XLA
+aliases the update in place, DESIGN.md §2).
+
+``Trainer`` is the host loop: deterministic data cursor, periodic atomic
+checkpoints, straggler deadline via :mod:`repro.train.fault`, resume.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from functools import partial
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.distributed.sharding import (activation_spec, batch_specs,
+                                        named_shardings, param_specs)
+from repro.models.api import loss_fn
+from repro.models.config import ModelConfig
+from repro.train import checkpoint as ckpt
+from repro.train.fault import StepWatchdog
+from repro.train.optim import (AdamWConfig, adamw_init, adamw_update,
+                               cosine_schedule)
+
+__all__ = ["make_train_step", "Trainer", "TrainerConfig"]
+
+
+def make_train_step(cfg: ModelConfig, mesh: Optional[Mesh] = None, *,
+                    opt: AdamWConfig = AdamWConfig(),
+                    schedule: Optional[Callable] = None,
+                    microbatches: int = 1,
+                    params_shape: Any = None,
+                    donate: bool = True):
+    """Build the jitted train step (optionally sharded over ``mesh``).
+
+    ``params_shape`` (ShapeDtypeStruct tree) is needed only when ``mesh``
+    is given, to derive in/out shardings without materializing params.
+    """
+    schedule = schedule or cosine_schedule(opt.lr, 100, 10_000)
+
+    def _loss_micro(params, micro):
+        return loss_fn(params, cfg, micro)
+
+    def step_fn(params, opt_state, batch, step):
+        if microbatches > 1:
+            def split(x):
+                # strided split keeps every microbatch spanning all data
+                # shards (see launch/dryrun.py)
+                return x.reshape(x.shape[0] // microbatches, microbatches,
+                                 *x.shape[1:]).swapaxes(0, 1)
+            micros = jax.tree_util.tree_map(split, batch)
+
+            def accum(carry, micro):
+                l, g = jax.value_and_grad(_loss_micro)(params, micro)
+                carry = (carry[0] + l,
+                         jax.tree_util.tree_map(jnp.add, carry[1], g))
+                return carry, None
+
+            zero_g = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (tot_l, tot_g), _ = jax.lax.scan(
+                accum, (jnp.zeros((), jnp.float32), zero_g), micros)
+            loss = tot_l / microbatches
+            grads = jax.tree_util.tree_map(lambda g: g / microbatches, tot_g)
+        else:
+            loss, grads = jax.value_and_grad(_loss_micro)(params, batch)
+
+        lr = schedule(step)
+        new_params, new_opt = adamw_update(grads, opt_state, params, opt, lr)
+        metrics = {"loss": loss, "lr": lr}
+        return new_params, new_opt, metrics
+
+    if mesh is None:
+        return jax.jit(step_fn, donate_argnums=(0, 1) if donate else ())
+
+    assert params_shape is not None, "mesh mode needs params_shape"
+    pspecs = param_specs(params_shape, mesh)
+    p_shard = named_shardings(pspecs, mesh)
+    # moments mirror the param specs; step scalar replicated
+    opt_shape = jax.eval_shape(partial(adamw_init, cfg=opt), params_shape)
+    o_shard = type(opt_shape)(
+        step=NamedSharding(mesh, P()),
+        m=named_shardings(pspecs, mesh),
+        v=named_shardings(pspecs, mesh))
+
+    def in_batch_shardings(batch_shape):
+        return named_shardings(batch_specs(batch_shape, mesh), mesh)
+
+    def jit_for(batch_shape):
+        return jax.jit(
+            step_fn,
+            in_shardings=(p_shard, o_shard, in_batch_shardings(batch_shape),
+                          NamedSharding(mesh, P())),
+            out_shardings=(p_shard, o_shard, NamedSharding(mesh, P())),
+            donate_argnums=(0, 1) if donate else ())
+
+    return jit_for
+
+
+@dataclasses.dataclass
+class TrainerConfig:
+    total_steps: int = 100
+    ckpt_every: int = 50
+    ckpt_dir: str = "/tmp/repro_ckpt"
+    log_every: int = 10
+    step_deadline_s: Optional[float] = None     # straggler budget
+
+
+class Trainer:
+    """Host loop: data cursor + checkpoints + watchdog + resume."""
+
+    def __init__(self, cfg: ModelConfig, data, train_step, params,
+                 opt_state, tcfg: TrainerConfig,
+                 key: Optional[jax.Array] = None):
+        self.cfg = cfg
+        self.data = data
+        self.train_step = train_step
+        self.params = params
+        self.opt_state = opt_state
+        self.tcfg = tcfg
+        self.key = key if key is not None else jax.random.PRNGKey(0)
+        self.step = 0
+        self.metrics_log = []
+        self.watchdog = StepWatchdog(tcfg.step_deadline_s)
+
+    # ---- fault tolerance ------------------------------------------------
+    def save(self):
+        tree = {"params": self.params, "opt": self.opt_state,
+                "key": self.key}
+        meta = {"cursor": self.data.cursor(self.step),
+                "arch": self.cfg.name}
+        ckpt.save(self.tcfg.ckpt_dir, self.step, tree, meta)
+
+    def try_resume(self) -> bool:
+        last = ckpt.latest_step(self.tcfg.ckpt_dir)
+        if last is None:
+            return False
+        template = {"params": self.params, "opt": self.opt_state,
+                    "key": self.key}
+        tree, meta = ckpt.restore(self.tcfg.ckpt_dir, template, step=last)
+        self.params = tree["params"]
+        self.opt_state = tree["opt"]
+        self.key = tree["key"]
+        self.step = meta["cursor"]["step"]
+        return True
+
+    # ---- the loop ---------------------------------------------------------
+    def run(self, steps: Optional[int] = None):
+        end = self.step + (steps if steps is not None
+                           else self.tcfg.total_steps)
+        while self.step < end:
+            batch = self.data.batch_at(self.step)
+            with self.watchdog.guard(self.step):
+                t0 = time.monotonic()
+                self.params, self.opt_state, m = self.train_step(
+                    self.params, self.opt_state, batch,
+                    jnp.asarray(self.step, jnp.int32))
+                m = jax.tree_util.tree_map(float, m)
+                m["step_time_s"] = time.monotonic() - t0
+            self.metrics_log.append({"step": self.step, **m})
+            if self.tcfg.log_every and self.step % self.tcfg.log_every == 0:
+                print(f"step {self.step:5d}  loss {m['loss']:.4f}  "
+                      f"({m['step_time_s']*1e3:.0f} ms)")
+            self.step += 1
+            if self.tcfg.ckpt_every and self.step % self.tcfg.ckpt_every == 0:
+                self.save()
+        return self.metrics_log

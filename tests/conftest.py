@@ -1,0 +1,18 @@
+"""Shared test config.
+
+x64 is enabled globally: the paper's faithful tier (FP64 vectors) is
+exactly reproducible on CPU.  Model tests pin explicit float32 dtypes, so
+they are unaffected by the flag.  Do NOT set
+--xla_force_host_platform_device_count here — smoke tests and benches
+must see 1 device (multi-device tests spawn subprocesses).
+"""
+import jax
+import pytest
+
+jax.config.update("jax_enable_x64", True)
+
+
+@pytest.fixture(scope="session")
+def rng():
+    import numpy as np
+    return np.random.default_rng(0)

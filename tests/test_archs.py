@@ -1,0 +1,141 @@
+"""Per-architecture smoke tests (assignment requirement).
+
+Each of the ten assigned architectures instantiates its REDUCED
+same-family config and runs one forward + one train step + one decode
+step on CPU, asserting output shapes and no NaNs.  The FULL configs are
+exercised only via the dry-run (ShapeDtypeStruct, no allocation).
+"""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import ARCHS, SHAPES, applicable, get_config, input_specs
+from repro.models import (count_params, decode_step, forward_logits,
+                          init_cache, init_params, loss_fn)
+from repro.train import AdamWConfig, adamw_init, adamw_update
+
+B, S = 2, 64
+
+
+def _batch(cfg, key):
+    toks = jax.random.randint(key, (B, S), 0, cfg.vocab)
+    labels = jnp.roll(toks, -1, axis=1)
+    batch = {"tokens": toks, "labels": labels}
+    if cfg.n_patches:
+        batch["patch_embeds"] = jnp.zeros((B, cfg.n_patches, cfg.d_model),
+                                          jnp.float32)
+    if cfg.encoder is not None:
+        batch["audio_embeds"] = jnp.zeros((B, cfg.encoder.n_ctx,
+                                           cfg.d_model), jnp.float32)
+    return batch
+
+
+@pytest.mark.parametrize("arch", sorted(ARCHS))
+class TestArchSmoke:
+    def test_forward_and_train_step(self, arch):
+        cfg = get_config(arch).reduced()
+        key = jax.random.PRNGKey(0)
+        params = init_params(cfg, key)
+        assert count_params(params) > 0
+        batch = _batch(cfg, key)
+        logits = forward_logits(params, cfg, batch)
+        assert logits.shape == (B, S, cfg.vocab)
+        assert not bool(jnp.isnan(logits).any()), f"{arch}: NaN logits"
+
+        loss, grads = jax.value_and_grad(
+            lambda p: loss_fn(p, cfg, batch))(params)
+        assert bool(jnp.isfinite(loss)), f"{arch}: non-finite loss"
+        gleaves = jax.tree_util.tree_leaves(grads)
+        assert all(bool(jnp.isfinite(g).all()) for g in gleaves), (
+            f"{arch}: non-finite grads")
+        opt = AdamWConfig(lr=1e-3, state_dtype="float32")
+        new_params, _ = adamw_update(grads, adamw_init(params, opt), params,
+                                     opt, jnp.asarray(1e-3))
+        # params must actually move
+        moved = any(
+            bool(jnp.any(a != b)) for a, b in zip(
+                jax.tree_util.tree_leaves(params),
+                jax.tree_util.tree_leaves(new_params)))
+        assert moved
+
+    def test_decode_step(self, arch):
+        cfg = get_config(arch).reduced()
+        key = jax.random.PRNGKey(0)
+        params = init_params(cfg, key)
+        cache = init_cache(cfg, B, 32, dtype=jnp.float32)
+        if cfg.encoder is not None:
+            from repro.models import encdec
+            enc = encdec.encode(params, cfg,
+                                jnp.zeros((B, cfg.encoder.n_ctx,
+                                           cfg.d_model)))
+            ck, cv = encdec.prefill_cross(params, cfg, enc)
+            cache["cross_k"], cache["cross_v"] = ck, cv
+        tok = jax.random.randint(key, (B,), 0, cfg.vocab)
+        logits, new_cache = decode_step(params, cfg, cache, tok,
+                                        jnp.asarray(0))
+        assert logits.shape == (B, cfg.vocab)
+        assert not bool(jnp.isnan(logits).any()), f"{arch}: NaN decode"
+        # cache must change somewhere
+        changed = any(
+            bool(jnp.any(a != b)) for a, b in zip(
+                jax.tree_util.tree_leaves(cache),
+                jax.tree_util.tree_leaves(new_cache)))
+        assert changed
+
+
+class TestAssignmentMatrix:
+    def test_exact_configs(self):
+        """Published dims are exact (spot checks against the assignment)."""
+        c = get_config("qwen2.5-32b")
+        assert (c.n_layers, c.d_model, c.n_heads, c.n_kv_heads, c.d_ff,
+                c.vocab) == (64, 5120, 40, 8, 27_648, 152_064)
+        assert c.qkv_bias
+        c = get_config("granite-34b")
+        assert (c.n_layers, c.d_model, c.n_kv_heads) == (88, 6144, 1)
+        c = get_config("mamba2-780m")
+        assert c.ssm.d_state == 128 and c.family == "ssm"
+        c = get_config("zamba2-1.2b")
+        assert c.ssm.d_state == 64 and c.family == "hybrid"
+        c = get_config("gemma3-1b")
+        assert c.local_global_ratio == 5 and c.vocab == 262_144
+        c = get_config("granite-moe-1b-a400m")
+        assert c.moe.n_experts == 32 and c.moe.top_k == 8
+        c = get_config("llama4-scout-17b-a16e")
+        assert c.moe.n_experts == 16 and c.moe.top_k == 1
+        c = get_config("internvl2-76b")
+        assert (c.n_layers, c.d_model, c.vocab) == (80, 8192, 128_256)
+        c = get_config("whisper-base")
+        assert c.encoder.n_layers == 6 and c.vocab == 51_865
+        c = get_config("h2o-danube-3-4b")
+        assert c.sliding_window is not None
+
+    def test_40_cells_defined(self):
+        """Every (arch × shape) cell is either runnable or a documented
+        skip; 40 total, skips only on long_500k for full-attention archs."""
+        total = runs = 0
+        for a in ARCHS:
+            cfg = get_config(a)
+            for s, shape in SHAPES.items():
+                total += 1
+                ok, why = applicable(cfg, shape)
+                if ok:
+                    runs += 1
+                else:
+                    assert s == "long_500k" and why
+        assert total == 40 and runs == 34
+
+    @pytest.mark.parametrize("arch", sorted(ARCHS))
+    def test_input_specs_no_allocation(self, arch):
+        """input_specs returns ShapeDtypeStructs (never real buffers)."""
+        cfg = get_config(arch)
+        for s, shape in SHAPES.items():
+            if not applicable(cfg, shape)[0]:
+                continue
+            specs = input_specs(arch, s)
+            for leaf in jax.tree_util.tree_leaves(specs):
+                assert isinstance(leaf, jax.ShapeDtypeStruct), type(leaf)
+
+    def test_long_500k_runs_subquadratic_archs(self):
+        for a in ("mamba2-780m", "zamba2-1.2b", "h2o-danube-3-4b",
+                  "gemma3-1b"):
+            assert applicable(get_config(a), SHAPES["long_500k"])[0], a

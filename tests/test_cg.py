@@ -1,0 +1,140 @@
+"""Solver property tests (hypothesis) + method equivalences."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.cg import jpcg_solve
+from repro.sparse import (csr_to_dense, diag_dominant_spd, poisson_2d,
+                          random_spd, tridiagonal_spd)
+
+FAST = dict(deadline=None, max_examples=12)
+
+
+class TestProperties:
+    @given(n=st.integers(8, 200), cond=st.floats(1.5, 1e4),
+           seed=st.integers(0, 2**16))
+    @settings(**FAST)
+    def test_solves_random_spd(self, n, cond, seed):
+        """∀ SPD A: JPCG converges and A·x ≈ b (the defining invariant)."""
+        a = random_spd(n, cond=cond, seed=seed)
+        res = jpcg_solve(a, tol=1e-14, maxiter=20 * n,
+                         block_rows=8, col_tile=128)
+        d = csr_to_dense(a)
+        x = np.asarray(res.x)
+        b = np.ones(n)
+        assert res.converged
+        assert np.linalg.norm(d @ x - b) <= 1e-5 * np.linalg.norm(b) * cond
+
+    @given(n=st.integers(16, 400), seed=st.integers(0, 2**16))
+    @settings(**FAST)
+    def test_vsr_equals_pipelined(self, n, seed):
+        """Paper schedule and beyond-paper pipelined CG agree on x."""
+        a = diag_dominant_spd(n, nnz_per_row=8, dominance=1.5, seed=seed)
+        r1 = jpcg_solve(a, method="vsr", tol=1e-13, maxiter=10 * n,
+                        block_rows=8, col_tile=128)
+        r2 = jpcg_solve(a, method="pipelined", tol=1e-13, maxiter=10 * n,
+                        block_rows=8, col_tile=128)
+        assert r1.converged and r2.converged
+        np.testing.assert_allclose(np.asarray(r1.x), np.asarray(r2.x),
+                                   rtol=1e-6, atol=1e-9)
+
+    @given(n=st.integers(32, 512))
+    @settings(**FAST)
+    def test_exact_arithmetic_bound(self, n):
+        """CG on the 1-D Laplacian converges within n iterations (theory:
+        ≤ n steps in exact arithmetic; Jacobi leaves κ unchanged here)."""
+        a = tridiagonal_spd(n)
+        res = jpcg_solve(a, tol=1e-10, maxiter=n + 10,
+                         block_rows=8, col_tile=128)
+        assert res.converged
+
+    @given(scale=st.floats(1e-3, 1e3))
+    @settings(**FAST)
+    def test_scale_invariant_iterations(self, scale):
+        """Jacobi preconditioning ⇒ iteration count invariant to a global
+        matrix scaling (residual threshold scales with b)."""
+        a = poisson_2d(16)
+        base = jpcg_solve(a, tol=1e-12, maxiter=2000, block_rows=8,
+                          col_tile=128).iterations
+        a2 = a.astype(np.float64)
+        a2 = type(a2)(a2.indptr, a2.indices, a2.data * scale, a2.shape)
+        b = np.ones(a.shape[0]) * scale
+        got = jpcg_solve(a2, b, tol=1e-12 * scale * scale, maxiter=2000,
+                         block_rows=8, col_tile=128).iterations
+        assert abs(got - base) <= 2
+
+
+class TestTermination:
+    def test_maxiter_respected(self):
+        a = diag_dominant_spd(500, nnz_per_row=12, dominance=1.01, seed=1)
+        res = jpcg_solve(a, tol=1e-30, maxiter=7, block_rows=8, col_tile=128)
+        assert res.iterations == 7 and not res.converged
+
+    def test_on_the_fly_termination(self):
+        """One compiled program serves different matrices with different
+        iteration counts (paper Challenge 1)."""
+        easy = tridiagonal_spd(256, off=-0.1)
+        hard = tridiagonal_spd(256)
+        r_easy = jpcg_solve(easy, tol=1e-12, maxiter=500, block_rows=8,
+                            col_tile=128)
+        r_hard = jpcg_solve(hard, tol=1e-12, maxiter=500, block_rows=8,
+                            col_tile=128)
+        assert r_easy.iterations < r_hard.iterations
+
+    def test_trace_matches_rr(self):
+        a = poisson_2d(16)
+        res = jpcg_solve(a, tol=1e-12, maxiter=2000, with_trace=True,
+                         block_rows=8, col_tile=128)
+        assert res.residual_trace.shape[0] == res.iterations
+        assert res.residual_trace[-1] == pytest.approx(res.rr)
+        assert res.residual_trace[-1] <= 1e-12
+
+    def test_x0_respected(self):
+        """Starting at the solution terminates immediately."""
+        a = poisson_2d(12)
+        d = csr_to_dense(a)
+        xstar = np.linalg.solve(d, np.ones(a.shape[0]))
+        res = jpcg_solve(a, x0=xstar, tol=1e-10, maxiter=100,
+                         block_rows=8, col_tile=128)
+        assert res.iterations <= 1
+
+
+class TestBackends:
+    def test_pallas_backend_matches_xla(self):
+        a = poisson_2d(24)
+        r_x = jpcg_solve(a, backend="xla", tol=1e-12, maxiter=2000,
+                         block_rows=64, col_tile=128)
+        r_p = jpcg_solve(a, backend="pallas", tol=1e-12, maxiter=2000,
+                         block_rows=128, col_tile=128)
+        assert r_x.iterations == r_p.iterations
+        np.testing.assert_allclose(np.asarray(r_x.x), np.asarray(r_p.x),
+                                   rtol=1e-9)
+
+    def test_matrix_free_operator(self):
+        """Callable A (the CGGN path) solves like the explicit matrix."""
+        import jax.numpy as jnp
+        a = random_spd(64, cond=100.0, seed=7)
+        d = csr_to_dense(a)
+        dj = jnp.asarray(d)
+        res = jpcg_solve(lambda v: dj @ v, diag=np.diag(d), n=64,
+                         tol=1e-13, maxiter=1000)
+        x = np.linalg.solve(d, np.ones(64))
+        np.testing.assert_allclose(np.asarray(res.x), x, rtol=1e-5,
+                                   atol=1e-7)
+
+    def test_dense_operator(self):
+        a = random_spd(48, cond=50.0, seed=3)
+        d = csr_to_dense(a)
+        res = jpcg_solve(d, scheme="fp64", tol=1e-20, maxiter=2000)
+        np.testing.assert_allclose(
+            np.asarray(res.x), np.linalg.solve(d, np.ones(48)),
+            rtol=1e-6, atol=1e-7)
+
+
+def test_residual_replacement_stabilizes_pipelined():
+    """Pipelined CG with periodic residual replacement reaches the same
+    tolerance as true-residual CG on an ill-conditioned system."""
+    a = diag_dominant_spd(2000, nnz_per_row=16, dominance=1.01, seed=4)
+    r = jpcg_solve(a, method="pipelined", replace_every=50, tol=1e-12,
+                   maxiter=20000, block_rows=64, col_tile=128)
+    assert r.converged

@@ -1,0 +1,96 @@
+"""Checkpoint layer: atomicity, verification, versioning, bf16."""
+import json
+import os
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.train import checkpoint as ckpt
+
+
+def _tree():
+    return {"a": jnp.arange(12.0).reshape(3, 4),
+            "nested": {"b": jnp.ones((5,), jnp.bfloat16),
+                       "c": jnp.asarray(3, jnp.int32)}}
+
+
+def test_save_restore_roundtrip(tmp_path):
+    t = _tree()
+    ckpt.save(str(tmp_path), 3, t, {"note": "hi"})
+    out, meta = ckpt.restore(str(tmp_path), t)
+    assert meta == {"note": "hi"}
+    for a, b in zip(jnp.asarray(t["a"]).ravel(),
+                    jnp.asarray(out["a"]).ravel()):
+        assert a == b
+    assert out["nested"]["b"].dtype == jnp.bfloat16
+    np.testing.assert_array_equal(np.asarray(out["nested"]["b"],
+                                             np.float32), 1.0)
+
+
+def test_versioning_and_latest(tmp_path):
+    t = _tree()
+    for s in (1, 5, 3):
+        ckpt.save(str(tmp_path), s, t)
+    assert ckpt.list_steps(str(tmp_path)) == [1, 3, 5]
+    assert ckpt.latest_step(str(tmp_path)) == 5
+    out, _ = ckpt.restore(str(tmp_path), t, step=3)
+    assert out is not None
+
+
+def test_torn_write_is_invisible(tmp_path):
+    """A crash mid-write leaves only *.tmp — restore never sees it."""
+    t = _tree()
+    ckpt.save(str(tmp_path), 1, t)
+    # simulate a torn write at step 2
+    torn = tmp_path / "step_000000002.tmp"
+    os.makedirs(torn)
+    (torn / "arrays.npz").write_bytes(b"garbage")
+    assert ckpt.latest_step(str(tmp_path)) == 1
+    out, _ = ckpt.restore(str(tmp_path), t)     # restores step 1, no error
+
+
+def test_corruption_detected(tmp_path):
+    t = _tree()
+    path = ckpt.save(str(tmp_path), 7, t)
+    payload = os.path.join(path, "arrays.npz")
+    data = bytearray(open(payload, "rb").read())
+    data[len(data) // 2] ^= 0xFF
+    open(payload, "wb").write(bytes(data))
+    with pytest.raises(IOError, match="hash mismatch"):
+        ckpt.restore(str(tmp_path), t)
+
+
+def test_shape_mismatch_detected(tmp_path):
+    t = _tree()
+    ckpt.save(str(tmp_path), 1, t)
+    bad = dict(t)
+    bad["a"] = jnp.zeros((2, 2))
+    with pytest.raises(ValueError, match="shape"):
+        ckpt.restore(str(tmp_path), bad)
+
+
+def test_missing_leaf_detected(tmp_path):
+    t = _tree()
+    ckpt.save(str(tmp_path), 1, t)
+    bigger = dict(t)
+    bigger["extra"] = jnp.zeros(3)
+    with pytest.raises(KeyError):
+        ckpt.restore(str(tmp_path), bigger)
+
+
+def test_idempotent_resave(tmp_path):
+    t = _tree()
+    ckpt.save(str(tmp_path), 2, t)
+    ckpt.save(str(tmp_path), 2, t)              # no error, one entry
+    assert ckpt.list_steps(str(tmp_path)) == [2]
+
+
+def test_manifest_contents(tmp_path):
+    t = _tree()
+    path = ckpt.save(str(tmp_path), 4, t, {"cursor": {"step": 4}})
+    m = json.load(open(os.path.join(path, "manifest.json")))
+    assert m["step"] == 4
+    assert m["metadata"]["cursor"]["step"] == 4
+    assert m["leaves"]["nested/b"]["dtype"] == "bfloat16"
+    assert len(m["sha256"]) == 64

@@ -1,0 +1,106 @@
+"""Fault tolerance: watchdog, retries, failure-injection restart."""
+import time
+
+import jax.numpy as jnp
+import pytest
+
+from repro.models import init_params
+from repro.models.config import ModelConfig
+from repro.train import (AdamWConfig, DataConfig, SyntheticLM, Trainer,
+                         TrainerConfig, adamw_init, make_train_step)
+from repro.train.fault import StepWatchdog, StragglerError, with_retries
+
+CFG = ModelConfig(name="tiny", family="dense", n_layers=1, d_model=32,
+                  n_heads=2, n_kv_heads=2, d_ff=64, vocab=64, head_dim=16,
+                  dtype="float32", remat=False)
+
+
+class TestWatchdog:
+    def test_breach_counting(self):
+        wd = StepWatchdog(deadline_s=0.01, max_breaches=3)
+        for step in range(2):
+            with wd.guard(step):
+                time.sleep(0.02)
+        assert wd.breaches == 2 and wd.consecutive == 2
+        with wd.guard(99):
+            pass                                 # fast step resets
+        assert wd.consecutive == 0
+
+    def test_escalates_after_max(self):
+        wd = StepWatchdog(deadline_s=0.005, max_breaches=2)
+        with wd.guard(0):
+            time.sleep(0.02)
+        with pytest.raises(StragglerError):
+            with wd.guard(1):
+                time.sleep(0.02)
+
+    def test_disabled_without_deadline(self):
+        wd = StepWatchdog(None)
+        with wd.guard(0):
+            time.sleep(0.01)
+        assert wd.breaches == 0
+
+
+class TestRetries:
+    def test_transient_fault_recovered(self):
+        calls = []
+
+        def flaky():
+            calls.append(1)
+            if len(calls) < 3:
+                raise RuntimeError("transient")
+            return "ok"
+
+        assert with_retries(flaky, retries=3) == "ok"
+        assert len(calls) == 3
+
+    def test_exhausted_raises(self):
+        def always():
+            raise RuntimeError("permanent")
+
+        with pytest.raises(RuntimeError, match="permanent"):
+            with_retries(always, retries=2)
+
+
+class TestKillAndRestart:
+    def test_mid_run_failure_resumes_identically(self, tmp_path):
+        """Inject a crash mid-training; restart from the checkpoint must
+        reproduce the uninterrupted trajectory exactly."""
+        opt = AdamWConfig(lr=5e-3, state_dtype="float32")
+        data = SyntheticLM(DataConfig(vocab=64, seq_len=16, global_batch=4))
+        step_fn = make_train_step(CFG, opt=opt)
+
+        def fresh():
+            import jax
+            p = init_params(CFG, jax.random.PRNGKey(0))
+            return p, adamw_init(p, opt)
+
+        # uninterrupted run: 10 steps
+        p, o = fresh()
+        ref = Trainer(CFG, data, step_fn, p, o,
+                      TrainerConfig(total_steps=10, ckpt_every=0,
+                                    ckpt_dir=str(tmp_path / "ref"),
+                                    log_every=0)).run()
+
+        # crashing run: checkpoint every 4, die at step 6
+        p, o = fresh()
+        tr = Trainer(CFG, data, step_fn, p, o,
+                     TrainerConfig(total_steps=10, ckpt_every=4,
+                                   ckpt_dir=str(tmp_path / "c"),
+                                   log_every=0))
+        try:
+            for _ in range(6):
+                tr.run(steps=1)
+            raise KeyboardInterrupt("simulated preemption")
+        except KeyboardInterrupt:
+            pass
+
+        # restart: resume at step 4 (last checkpoint), run to 10
+        p, o = fresh()
+        tr2 = Trainer(CFG, data, step_fn, p, o,
+                      TrainerConfig(ckpt_dir=str(tmp_path / "c"),
+                                    log_every=0))
+        assert tr2.try_resume() and tr2.step == 4
+        log2 = tr2.run(steps=6)
+        for a, b in zip(log2, ref[4:]):
+            assert a["loss"] == b["loss"]

@@ -1,0 +1,90 @@
+"""Stream-centric ISA + VM (paper §3–4): encodings, derived memory
+instructions, VM ≡ production solver, no-retrace program swapping."""
+import jax
+import numpy as np
+import pytest
+
+from repro.core.cg import jpcg_solve
+from repro.core.isa import (ITYPE_COMP, ITYPE_CTRL, ITYPE_NOP, ITYPE_VCTRL,
+                            Instr, assemble_jpcg, derived_mem_instructions,
+                            pad_program)
+from repro.core.vm import vm_solve
+from repro.sparse import poisson_2d, tridiagonal_spd
+
+
+def test_encoding_roundtrip():
+    i = Instr(ITYPE_COMP, f1=3, rd=1, qa=2, qb=4, qd=5, sreg=1)
+    w = i.encode()
+    assert w == [ITYPE_COMP, 3, 1, 0, 2, 4, 5, 1]
+    assert len(w) == 8
+
+
+def test_program_shape_and_types():
+    enc, instrs = assemble_jpcg("paper")
+    assert enc.dtype == np.int32 and enc.shape == (len(instrs), 8)
+    assert set(enc[:, 0]) <= {ITYPE_VCTRL, ITYPE_COMP, ITYPE_CTRL, ITYPE_NOP}
+
+
+@pytest.mark.parametrize("policy,reads,writes", [("paper", 10, 4),
+                                                 ("min_traffic", 9, 4)])
+def test_derived_memory_instructions_match_vsr(policy, reads, writes):
+    """§4.1.3: Type-III InstRdWr stream == the §5.5 accounting."""
+    enc, _ = assemble_jpcg(policy)
+    m = derived_mem_instructions(enc)
+    assert m == {"reads": reads, "writes": writes,
+                 "total": reads + writes}
+
+
+@pytest.mark.parametrize("policy", ["paper", "min_traffic"])
+def test_vm_matches_production_solver(policy):
+    """Executing the ISA program reproduces the phase-fused solver
+    exactly (same iterate path ⇒ same iteration count and residual)."""
+    a = poisson_2d(24)
+    prog, _ = assemble_jpcg(policy)
+    out = vm_solve(a, program=prog, tol=1e-12, maxiter=3000,
+                   scheme="mixed_v3", block_rows=64, col_tile=128)
+    ref = jpcg_solve(a, tol=1e-12, maxiter=3000, scheme="mixed_v3",
+                     block_rows=64, col_tile=128)
+    assert out["iterations"] == ref.iterations
+    np.testing.assert_allclose(np.asarray(out["x"]), np.asarray(ref.x),
+                               rtol=1e-10, atol=1e-12)
+
+
+def test_nop_padding_preserves_semantics():
+    """NOP-padded programs (shared compiled VM across policies) solve
+    identically — the paper's 'no re-synthesis per problem' goal."""
+    a = tridiagonal_spd(512)
+    p1, _ = assemble_jpcg("paper")
+    p2, _ = assemble_jpcg("min_traffic")
+    length = max(p1.shape[0], p2.shape[0])
+    o1 = vm_solve(a, program=pad_program(p1, length), tol=1e-12,
+                  maxiter=2000, block_rows=64, col_tile=128)
+    o2 = vm_solve(a, program=pad_program(p2, length), tol=1e-12,
+                  maxiter=2000, block_rows=64, col_tile=128)
+    assert o1["iterations"] == o2["iterations"]
+    np.testing.assert_allclose(np.asarray(o1["x"]), np.asarray(o2["x"]),
+                               rtol=1e-10)
+
+
+def test_program_is_operand_not_trace_constant():
+    """Same padded length ⇒ one compiled executable for both programs."""
+    from repro.core.vm import _vm_run
+    a = tridiagonal_spd(256)
+    p1, _ = assemble_jpcg("paper")
+    p2, _ = assemble_jpcg("min_traffic")
+    L = max(p1.shape[0], p2.shape[0])
+    n_before = _vm_run._cache_size()
+    vm_solve(a, program=pad_program(p1, L), tol=1e-12, maxiter=100,
+             block_rows=64, col_tile=128)
+    n_mid = _vm_run._cache_size()
+    vm_solve(a, program=pad_program(p2, L), tol=1e-12, maxiter=100,
+             block_rows=64, col_tile=128)
+    n_after = _vm_run._cache_size()
+    assert n_mid == n_before + 1
+    assert n_after == n_mid              # second program: cache HIT
+
+
+def test_pad_program_rejects_truncation():
+    enc, _ = assemble_jpcg("paper")
+    with pytest.raises(ValueError):
+        pad_program(enc, enc.shape[0] - 1)

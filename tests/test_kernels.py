@@ -1,0 +1,157 @@
+"""Pallas kernels vs pure-jnp oracles — shape/dtype sweeps, interpret=True.
+
+Every kernel in repro.kernels is swept against its ref.py oracle and
+(where applicable) against a dense ground truth.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.precision import get_scheme
+from repro.kernels.dot import dot3_pallas, dot_pallas
+from repro.kernels.fused_phase import phase2_pallas, phase3_pallas
+from repro.kernels.ops import ell_operator_pallas
+from repro.kernels.ref import (dot3_ref, dot_ref, phase2_ref, phase3_ref,
+                               spmv_ref)
+from repro.kernels.spmv import spmv_pallas
+from repro.sparse import csr_to_dense, diag_dominant_spd, poisson_2d
+from repro.sparse.ellpack import csr_to_ellpack
+
+FAST = dict(deadline=None, max_examples=10)
+
+
+def _tol(dtype):
+    return {"float64": 1e-12, "float32": 2e-5, "bfloat16": 2e-1}[
+        jnp.dtype(dtype).name]
+
+
+class TestSpMV:
+    @pytest.mark.parametrize("scheme", ["fp64", "mixed_v3", "mixed_v1",
+                                        "tpu_v3", "tpu_fp32"])
+    @pytest.mark.parametrize("block_rows,col_tile", [(128, 128), (256, 512),
+                                                     (8, 128)])
+    def test_sweep_vs_oracle(self, scheme, block_rows, col_tile):
+        sch = get_scheme(scheme)
+        a = poisson_2d(24)                       # n=576
+        m = csr_to_ellpack(a, block_rows=block_rows, col_tile=col_tile)
+        x = np.random.default_rng(0).standard_normal(a.shape[0])
+        xt = jnp.zeros(m.padded_cols, sch.spmv_in_dtype).at[
+            : a.shape[0]].set(jnp.asarray(x, sch.spmv_in_dtype))
+        xt = xt.reshape(-1, m.col_tile)
+        vals = jnp.asarray(m.vals).astype(sch.matrix_dtype)
+        tc = jnp.asarray(m.tile_cols)
+        lc = jnp.asarray(m.local_cols)
+        yk = spmv_pallas(tc, vals, lc, xt, scheme=sch, interpret=True)
+        yr = spmv_ref(tc, vals, lc, xt, scheme=sch)
+        np.testing.assert_allclose(
+            np.asarray(yk, np.float64), np.asarray(yr, np.float64),
+            rtol=_tol(sch.spmv_acc_dtype), atol=_tol(sch.spmv_acc_dtype))
+
+    @given(n=st.integers(16, 300), nnz=st.integers(4, 24),
+           seed=st.integers(0, 1000))
+    @settings(**FAST)
+    def test_property_vs_dense(self, n, nnz, seed):
+        """Kernel result == dense matvec for random sparse matrices."""
+        a = diag_dominant_spd(n, nnz_per_row=nnz, dominance=1.3, seed=seed)
+        op = ell_operator_pallas(a, "fp64", block_rows=8, col_tile=128,
+                                 interpret=True)
+        x = np.random.default_rng(seed).standard_normal(n)
+        y = np.asarray(op.matvec(jnp.asarray(x)))
+        np.testing.assert_allclose(y, csr_to_dense(a) @ x, rtol=1e-10,
+                                   atol=1e-10)
+
+    def test_mixed_v1_rounds_input(self):
+        """Mix-V1 casts x to fp32 — the kernel must LOSE the fp64 tail
+        (this is the information loss that breaks convergence in Fig. 9)."""
+        a = poisson_2d(8)
+        op64 = ell_operator_pallas(a, "fp64", block_rows=8, col_tile=128,
+                                   interpret=True)
+        op1 = ell_operator_pallas(a, "mixed_v1", block_rows=8, col_tile=128,
+                                  interpret=True)
+        x = jnp.asarray(np.random.default_rng(1).standard_normal(64)
+                        * (1 + 1e-12))
+        y64 = np.asarray(op64.matvec(x), np.float64)
+        y1 = np.asarray(op1.matvec(x), np.float64)
+        assert 0 < np.abs(y64 - y1).max() < 1e-4
+
+
+class TestDot:
+    @pytest.mark.parametrize("n", [1, 7, 4096, 4097, 12345])
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.float64])
+    def test_dot_sweep(self, n, dtype):
+        r = np.random.default_rng(n)
+        a = jnp.asarray(r.standard_normal(n), dtype)
+        b = jnp.asarray(r.standard_normal(n), dtype)
+        got = dot_pallas(a, b, acc_dtype=dtype, interpret=True)
+        want = dot_ref(a, b, acc_dtype=dtype)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=_tol(dtype) * 10)
+
+    @pytest.mark.parametrize("n", [5, 4096, 9999])
+    def test_dot3_fused(self, n):
+        r = np.random.default_rng(n)
+        u, v, w = (jnp.asarray(r.standard_normal(n)) for _ in range(3))
+        got = dot3_pallas(u, v, w, acc_dtype=jnp.float64, interpret=True)
+        want = dot3_ref(u, v, w, acc_dtype=jnp.float64)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-10)
+
+
+class TestFusedPhases:
+    @pytest.mark.parametrize("n", [33, 4096, 5001])
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.float64])
+    def test_phase2(self, n, dtype):
+        r = np.random.default_rng(n)
+        rv = jnp.asarray(r.standard_normal(n), dtype)
+        ap = jnp.asarray(r.standard_normal(n), dtype)
+        dg = jnp.asarray(r.random(n) + 0.5, dtype)
+        alpha = jnp.asarray(0.37, dtype)
+        rn_k, s_k = phase2_pallas(alpha, rv, ap, dg, interpret=True)
+        rn_r, s_r = phase2_ref(alpha, rv, ap, dg)
+        np.testing.assert_allclose(np.asarray(rn_k), np.asarray(rn_r),
+                                   rtol=_tol(dtype))
+        np.testing.assert_allclose(np.asarray(s_k), np.asarray(s_r),
+                                   rtol=_tol(dtype) * 100)
+
+    @pytest.mark.parametrize("n", [33, 4096, 5001])
+    def test_phase3(self, n):
+        r = np.random.default_rng(n)
+        args = [jnp.asarray(r.standard_normal(n)) for _ in range(3)]
+        dg = jnp.asarray(r.random(n) + 0.5)
+        pn_k, xn_k = phase3_pallas(jnp.asarray(0.3), jnp.asarray(0.7),
+                                   args[0], dg, args[1], args[2],
+                                   interpret=True)
+        pn_r, xn_r = phase3_ref(jnp.asarray(0.3), jnp.asarray(0.7),
+                                args[0], dg, args[1], args[2])
+        np.testing.assert_allclose(np.asarray(pn_k), np.asarray(pn_r),
+                                   rtol=1e-12)
+        np.testing.assert_allclose(np.asarray(xn_k), np.asarray(xn_r),
+                                   rtol=1e-12)
+
+    def test_z_stays_on_chip(self):
+        """The phase-2 kernel returns r' and scalars ONLY — z is never an
+        output (paper §5.3 'never stored')."""
+        out = phase2_pallas(jnp.asarray(0.1), jnp.ones(64), jnp.ones(64),
+                            jnp.ones(64), interpret=True)
+        assert len(out) == 2                     # (r_new, [rr, rz])
+
+
+class TestPaddingInvariants:
+    @given(n=st.integers(1, 5000))
+    @settings(**FAST)
+    def test_dot_padding_exact(self, n):
+        """Zero padding must not perturb the reduction."""
+        a = jnp.ones(n, jnp.float64)
+        got = dot_pallas(a, a, acc_dtype=jnp.float64, interpret=True)
+        assert float(got) == float(n)
+
+    @given(n=st.integers(2, 2000))
+    @settings(**FAST)
+    def test_phase2_padding_no_nan(self, n):
+        """Padded diag lanes are 1.0 — no NaN leaks from 0/0."""
+        rn, s = phase2_pallas(jnp.asarray(1.0), jnp.ones(n), jnp.ones(n),
+                              jnp.full(n, 2.0), interpret=True)
+        assert np.isfinite(np.asarray(s)).all()
+        assert float(s[0]) == pytest.approx(0.0, abs=1e-12)

@@ -1,0 +1,244 @@
+"""Model substrate invariants: masks, RoPE, GQA, MoE, SSD, chunked attn."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import repro.models.attention as A
+from repro.models.attention import (attention, attn_decode, init_attention,
+                                    init_attn_cache)
+from repro.models.config import MoEConfig, SSMConfig
+from repro.models.layers import (apply_rope, init_mlp, init_rmsnorm, mlp,
+                                 rmsnorm, rope_freqs)
+from repro.models.moe import init_moe, moe_ffn
+from repro.models.ssm import (init_mamba2, init_ssm_cache, mamba2_decode,
+                              mamba2_forward)
+
+KEY = jax.random.PRNGKey(0)
+F32 = jnp.float32
+
+
+class TestRoPE:
+    @given(shift=st.integers(1, 100))
+    @settings(deadline=None, max_examples=10)
+    def test_relative_position_invariance(self, shift):
+        """⟨rope(q,i), rope(k,j)⟩ depends only on i−j."""
+        q = jax.random.normal(KEY, (1, 1, 1, 32))
+        k = jax.random.normal(jax.random.PRNGKey(1), (1, 1, 1, 32))
+
+        def score(i, j):
+            ci, si = rope_freqs(jnp.array([[i]]), 32)
+            cj, sj = rope_freqs(jnp.array([[j]]), 32)
+            return float(jnp.sum(apply_rope(q, ci, si)
+                                 * apply_rope(k, cj, sj)))
+
+        assert score(3, 5) == pytest.approx(score(3 + shift, 5 + shift),
+                                            rel=1e-4, abs=1e-5)
+
+    def test_norm_preserved(self):
+        x = jax.random.normal(KEY, (2, 8, 4, 64))
+        cos, sin = rope_freqs(jnp.arange(8)[None], 64)
+        y = apply_rope(x, cos, sin)
+        np.testing.assert_allclose(jnp.linalg.norm(y, axis=-1),
+                                   jnp.linalg.norm(x, axis=-1), rtol=1e-5)
+
+
+class TestAttentionMasks:
+    def _p(self, kv=2):
+        return init_attention(KEY, 32, 4, kv, 8)
+
+    def test_causality(self):
+        """Future tokens cannot influence past outputs."""
+        p = self._p()
+        x1 = jax.random.normal(KEY, (1, 16, 32))
+        x2 = x1.at[:, 10:].set(jax.random.normal(jax.random.PRNGKey(9),
+                                                 (1, 6, 32)))
+        y1 = attention(p, x1, n_heads=4, n_kv_heads=2, head_dim=8)
+        y2 = attention(p, x2, n_heads=4, n_kv_heads=2, head_dim=8)
+        np.testing.assert_allclose(y1[:, :10], y2[:, :10], atol=1e-5)
+        assert not np.allclose(y1[:, 10:], y2[:, 10:])
+
+    def test_window_limits_reach(self):
+        """With window w, changing a token > w positions back is invisible."""
+        p = self._p()
+        x1 = jax.random.normal(KEY, (1, 32, 32))
+        x2 = x1.at[:, 0].set(0.0)
+        y1 = attention(p, x1, n_heads=4, n_kv_heads=2, head_dim=8, window=8)
+        y2 = attention(p, x2, n_heads=4, n_kv_heads=2, head_dim=8, window=8)
+        np.testing.assert_allclose(y1[:, 16:], y2[:, 16:], atol=1e-5)
+
+    def test_chunked_equals_full(self):
+        old = (A.CHUNKED_ABOVE, A.Q_CHUNK)
+        try:
+            p = self._p()
+            x = jax.random.normal(KEY, (2, 64, 32))
+            A.CHUNKED_ABOVE, A.Q_CHUNK = 1 << 30, 16
+            y_full = attention(p, x, n_heads=4, n_kv_heads=2, head_dim=8,
+                               window=20)
+            A.CHUNKED_ABOVE = 32
+            y_chunk = attention(p, x, n_heads=4, n_kv_heads=2, head_dim=8,
+                                window=20)
+            np.testing.assert_allclose(y_chunk, y_full, atol=1e-5)
+        finally:
+            A.CHUNKED_ABOVE, A.Q_CHUNK = old
+
+    def test_gqa_equals_repeated_mha(self):
+        """GQA(kv=2) == MHA with kv heads explicitly repeated."""
+        p = self._p(kv=2)
+        x = jax.random.normal(KEY, (1, 12, 32))
+        y = attention(p, x, n_heads=4, n_kv_heads=2, head_dim=8)
+        p_mha = dict(p)
+        p_mha["wk"] = {"w": jnp.concatenate(
+            [p["wk"]["w"].reshape(32, 2, 8)[:, [i // 2]]
+             for i in range(4)], axis=1).reshape(32, 32)}
+        p_mha["wv"] = {"w": jnp.concatenate(
+            [p["wv"]["w"].reshape(32, 2, 8)[:, [i // 2]]
+             for i in range(4)], axis=1).reshape(32, 32)}
+        y2 = attention(p_mha, x, n_heads=4, n_kv_heads=4, head_dim=8)
+        np.testing.assert_allclose(y, y2, atol=1e-5)
+
+
+class TestDecodeCache:
+    def test_decode_matches_forward(self):
+        """Token-by-token decode reproduces the full forward pass."""
+        p = init_attention(KEY, 32, 4, 2, 8)
+        x = jax.random.normal(KEY, (1, 10, 32))
+        y_full = attention(p, x, n_heads=4, n_kv_heads=2, head_dim=8)
+        cache = init_attn_cache(1, 16, 2, 8, dtype=F32)
+        outs = []
+        for t in range(10):
+            y, cache = attn_decode(p, x[:, t:t + 1], cache,
+                                   jnp.asarray(t), n_heads=4, n_kv_heads=2,
+                                   head_dim=8)
+            outs.append(y)
+        np.testing.assert_allclose(jnp.concatenate(outs, 1), y_full,
+                                   atol=1e-4)
+
+    def test_ring_cache_matches_window_mask(self):
+        """Ring decode (O(w) state) == full cache + window mask."""
+        p = init_attention(KEY, 32, 4, 4, 8)
+        T, w = 20, 8
+        x = jax.random.normal(KEY, (1, T, 32))
+        ring = init_attn_cache(1, w, 4, 8, ring=True, dtype=F32)
+        full = init_attn_cache(1, T, 4, 8, ring=False, dtype=F32)
+        for t in range(T):
+            yr, ring = attn_decode(p, x[:, t:t + 1], ring, jnp.asarray(t),
+                                   n_heads=4, n_kv_heads=4, head_dim=8,
+                                   window=w)
+            yf, full = attn_decode(p, x[:, t:t + 1], full, jnp.asarray(t),
+                                   n_heads=4, n_kv_heads=4, head_dim=8,
+                                   window=w)
+            np.testing.assert_allclose(yr, yf, atol=1e-4,
+                                       err_msg=f"t={t}")
+
+    def test_ragged_positions(self):
+        """Per-slot positions decode independently (continuous batching)."""
+        p = init_attention(KEY, 32, 4, 4, 8)
+        x = jax.random.normal(KEY, (2, 1, 32))
+        # batched with pos [3, 7] == two single-slot decodes
+        cb = init_attn_cache(2, 16, 4, 8, dtype=F32)
+        cb = type(cb)(k=jax.random.normal(KEY, cb.k.shape),
+                      v=jax.random.normal(KEY, cb.v.shape), ring=False)
+        yb, _ = attn_decode(p, x, cb, jnp.asarray([3, 7]), n_heads=4,
+                            n_kv_heads=4, head_dim=8)
+        for i, pos in enumerate([3, 7]):
+            ci = type(cb)(k=cb.k[i:i + 1], v=cb.v[i:i + 1], ring=False)
+            yi, _ = attn_decode(p, x[i:i + 1], ci, jnp.asarray(pos),
+                                n_heads=4, n_kv_heads=4, head_dim=8)
+            np.testing.assert_allclose(yb[i:i + 1], yi, atol=1e-5)
+
+
+class TestMoE:
+    def test_output_finite_and_shaped(self):
+        cfg = MoEConfig(n_experts=8, top_k=2)
+        p = init_moe(KEY, 32, 64, cfg)
+        x = jax.random.normal(KEY, (2, 16, 32))
+        y = moe_ffn(p, x, cfg)
+        assert y.shape == x.shape and bool(jnp.isfinite(y).all())
+
+    def test_capacity_drops_tokens(self):
+        """With capacity_factor ≪ 1 overflow tokens are dropped (output
+        contribution 0), not corrupted."""
+        cfg = MoEConfig(n_experts=2, top_k=1, capacity_factor=0.1)
+        p = init_moe(KEY, 16, 32, cfg)
+        x = jax.random.normal(KEY, (1, 64, 16))
+        y = moe_ffn(p, x, cfg)
+        assert bool(jnp.isfinite(y).all())
+        # most tokens dropped => many exact-zero rows
+        zero_rows = int((jnp.abs(y[0]).max(axis=-1) == 0).sum())
+        assert zero_rows >= 32
+
+    def test_top1_equals_dense_single_expert(self):
+        """n_experts=1 MoE == its sole expert's SwiGLU."""
+        cfg = MoEConfig(n_experts=1, top_k=1, capacity_factor=2.0)
+        p = init_moe(KEY, 16, 32, cfg)
+        x = jax.random.normal(KEY, (1, 8, 16))
+        y = moe_ffn(p, x, cfg)
+        h = jax.nn.silu(x @ p["wg"][0]) * (x @ p["wi"][0])
+        want = h @ p["wo"][0]
+        np.testing.assert_allclose(y, want, atol=1e-5)
+
+
+class TestSSD:
+    def _naive_recurrence(self, x, dt, a_head, B, C):
+        """Step-by-step SSM reference: h = e^{aΔ}h + Δ·B⊗x; y = C·h."""
+        b, s, h, p = x.shape
+        n = B.shape[-1]
+        hstate = np.zeros((b, h, p, n))
+        ys = np.zeros((b, s, h, p))
+        for t in range(s):
+            dec = np.exp(np.asarray(dt[:, t]) * np.asarray(a_head))  # [b,h]
+            upd = np.einsum("bh,bn,bhp->bhpn", np.asarray(dt[:, t]),
+                            np.asarray(B[:, t]), np.asarray(x[:, t]))
+            hstate = dec[:, :, None, None] * hstate + upd
+            ys[:, t] = np.einsum("bn,bhpn->bhp", np.asarray(C[:, t]),
+                                 hstate)
+        return ys, hstate
+
+    @pytest.mark.parametrize("s,chunk", [(8, 4), (12, 4), (16, 16), (9, 4)])
+    def test_chunked_ssd_matches_recurrence(self, s, chunk):
+        from repro.models.ssm import _ssd_chunked
+        r = np.random.default_rng(0)
+        b, h, p, n = 2, 3, 4, 5
+        x = jnp.asarray(r.standard_normal((b, s, h, p)), F32)
+        dt = jnp.asarray(r.random((b, s, h)) * 0.5 + 0.1, F32)
+        a_head = jnp.asarray(-r.random(h) - 0.1, F32)
+        B = jnp.asarray(r.standard_normal((b, s, n)), F32)
+        C = jnp.asarray(r.standard_normal((b, s, n)), F32)
+        y, h_last = _ssd_chunked(x, dt, a_head, B, C, chunk)
+        y_ref, h_ref = self._naive_recurrence(x, dt, a_head, B, C)
+        np.testing.assert_allclose(np.asarray(y), y_ref, rtol=1e-4,
+                                   atol=1e-4)
+        np.testing.assert_allclose(np.asarray(h_last), h_ref, rtol=1e-4,
+                                   atol=1e-4)
+
+    def test_decode_matches_forward(self):
+        """Single-token SSD decode chain == chunked forward pass."""
+        cfg = SSMConfig(d_state=8, expand=2, d_conv=4, headdim=8, chunk=4)
+        d_model = 16
+        p = init_mamba2(KEY, d_model, cfg)
+        x = jax.random.normal(KEY, (1, 12, d_model), F32)
+        y_full = mamba2_forward(p, x, d_model, cfg)
+        cache = init_ssm_cache(1, d_model, cfg, dtype=F32)
+        outs = []
+        for t in range(12):
+            y, cache = mamba2_decode(p, x[:, t:t + 1], cache, d_model, cfg)
+            outs.append(y)
+        np.testing.assert_allclose(np.asarray(jnp.concatenate(outs, 1)),
+                                   np.asarray(y_full), rtol=2e-3, atol=2e-3)
+
+
+class TestLayers:
+    @given(d=st.sampled_from([8, 32, 128]))
+    @settings(deadline=None, max_examples=5)
+    def test_rmsnorm_scale_invariance(self, d):
+        p = init_rmsnorm(d)
+        x = jax.random.normal(KEY, (4, d))
+        np.testing.assert_allclose(rmsnorm(p, x), rmsnorm(p, 10.0 * x),
+                                   rtol=1e-4, atol=1e-5)
+
+    def test_mlp_shapes(self):
+        p = init_mlp(KEY, 16, 64)
+        y = mlp(p, jax.random.normal(KEY, (2, 5, 16)))
+        assert y.shape == (2, 5, 16)

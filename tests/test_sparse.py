@@ -1,0 +1,143 @@
+"""Sparse substrate: CSR / banked-ELL / ELLPACK / partition / mtx IO."""
+import os
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.sparse import (CSRMatrix, bell_spmv_reference, csr_from_coo,
+                          csr_spmv, csr_to_bell, csr_to_dense,
+                          diag_dominant_spd, partition_rows, poisson_2d,
+                          poisson_3d, random_spd, read_mtx, tridiagonal_spd,
+                          write_mtx)
+from repro.sparse.ellpack import csr_to_ellpack, ellpack_spmv_reference
+
+FAST = dict(deadline=None, max_examples=15)
+
+
+class TestCSR:
+    def test_coo_roundtrip_with_duplicates(self):
+        rows = np.array([0, 0, 1, 0])
+        cols = np.array([1, 0, 1, 1])
+        vals = np.array([2.0, 1.0, 5.0, 3.0])
+        a = csr_from_coo(rows, cols, vals, (2, 2))
+        d = csr_to_dense(a)
+        np.testing.assert_array_equal(d, [[1.0, 5.0], [0.0, 5.0]])
+
+    def test_diagonal(self):
+        a = poisson_2d(8)
+        np.testing.assert_array_equal(a.diagonal(), np.full(64, 4.0))
+
+    @given(n=st.integers(4, 64), seed=st.integers(0, 100))
+    @settings(**FAST)
+    def test_spmv_matches_dense(self, n, seed):
+        a = diag_dominant_spd(n, nnz_per_row=6, dominance=1.5, seed=seed)
+        x = np.random.default_rng(seed).standard_normal(n)
+        np.testing.assert_allclose(csr_spmv(a, x), csr_to_dense(a) @ x,
+                                   rtol=1e-12)
+
+
+class TestGenerators:
+    @pytest.mark.parametrize("make,n", [
+        (lambda: poisson_2d(12), 144),
+        (lambda: poisson_3d(5), 125),
+        (lambda: tridiagonal_spd(64), 64),
+        (lambda: diag_dominant_spd(80, seed=1), 80),
+        (lambda: random_spd(24, seed=1), 24),
+    ])
+    def test_spd(self, make, n):
+        a = make()
+        assert a.shape == (n, n)
+        d = csr_to_dense(a)
+        np.testing.assert_allclose(d, d.T, atol=1e-12)
+        w = np.linalg.eigvalsh(d)
+        assert w.min() > 0, f"not PD: λmin={w.min()}"
+
+    def test_random_spd_condition(self):
+        a = random_spd(32, cond=1e3, seed=0)
+        w = np.linalg.eigvalsh(csr_to_dense(a))
+        assert w.max() / w.min() == pytest.approx(1e3, rel=0.05)
+
+
+class TestBell:
+    @given(n=st.integers(8, 120), seed=st.integers(0, 50))
+    @settings(**FAST)
+    def test_bell_spmv_matches(self, n, seed):
+        a = diag_dominant_spd(n, nnz_per_row=8, dominance=1.4, seed=seed)
+        m = csr_to_bell(a, block_rows=8, col_tile=16)
+        x = np.random.default_rng(seed).standard_normal(n)
+        np.testing.assert_allclose(bell_spmv_reference(m, x),
+                                   csr_to_dense(a) @ x, rtol=1e-10,
+                                   atol=1e-10)
+
+    def test_nnz_preserved(self):
+        a = poisson_2d(10)
+        m = csr_to_bell(a, block_rows=16, col_tile=32)
+        assert m.nnz == a.nnz
+        assert 0 < m.padding_efficiency <= 1.0
+
+    def test_stream_bytes_ordering(self):
+        """Lower precision ⇒ smaller matrix stream (Challenge 3)."""
+        a = poisson_2d(10)
+        m = csr_to_bell(a, block_rows=16, col_tile=32)
+        assert m.stream_bytes(2) < m.stream_bytes(4) < m.stream_bytes(8)
+
+
+class TestEllpack:
+    @given(n=st.integers(8, 150), nnz=st.integers(2, 12),
+           seed=st.integers(0, 50))
+    @settings(**FAST)
+    def test_ellpack_matches_dense(self, n, nnz, seed):
+        a = diag_dominant_spd(n, nnz_per_row=nnz, dominance=1.4, seed=seed)
+        m = csr_to_ellpack(a, block_rows=8, col_tile=16)
+        x = np.random.default_rng(seed).standard_normal(n)
+        np.testing.assert_allclose(ellpack_spmv_reference(m, x),
+                                   csr_to_dense(a) @ x, rtol=1e-10,
+                                   atol=1e-10)
+
+    def test_local_indices_fit_int16(self):
+        """The Serpens-style packing claim: local col ids < col_tile."""
+        a = poisson_2d(32)
+        m = csr_to_ellpack(a, block_rows=128, col_tile=512)
+        assert m.local_cols.max() < 512 <= 32768
+
+
+class TestPartition:
+    @pytest.mark.parametrize("n_shards", [1, 2, 4, 7])
+    def test_partition_preserves_matrix(self, n_shards):
+        a = poisson_2d(12)                       # n=144
+        part = partition_rows(a, n_shards, block_rows=8, col_tile=16)
+        x = np.random.default_rng(0).standard_normal(144)
+        want = csr_to_dense(a) @ x
+        got = np.zeros(part.padded_rows)
+        for k in range(n_shards):
+            sh = part.shard(k)
+            xp = x
+            got[k * part.rows_per_shard:(k + 1) * part.rows_per_shard] = \
+                bell_spmv_reference(sh, xp)
+        np.testing.assert_allclose(got[:144], want, rtol=1e-10, atol=1e-10)
+
+    def test_halo_width_stencil(self):
+        """Stencil matrices report a narrow halo (enables ppermute)."""
+        a = poisson_2d(16)                       # bandwidth 16
+        part = partition_rows(a, 4, block_rows=8, col_tile=16)
+        assert 0 < part.halo_width <= 16
+
+
+class TestMtxIO:
+    def test_roundtrip(self, tmp_path):
+        a = diag_dominant_spd(20, nnz_per_row=4, seed=3)
+        p = os.path.join(tmp_path, "m.mtx")
+        write_mtx(p, a)
+        b = read_mtx(p)
+        np.testing.assert_allclose(csr_to_dense(a), csr_to_dense(b),
+                                   rtol=1e-12)
+
+    def test_symmetric_storage(self, tmp_path):
+        """SuiteSparse symmetric .mtx stores the lower triangle only."""
+        a = poisson_2d(4)
+        p = os.path.join(tmp_path, "sym.mtx")
+        write_mtx(p, a, symmetric=True)
+        b = read_mtx(p)
+        np.testing.assert_allclose(csr_to_dense(a), csr_to_dense(b),
+                                   rtol=1e-12)

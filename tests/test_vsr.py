@@ -1,0 +1,75 @@
+"""VSR scheduling (paper §5): phase partition, HBM access accounting."""
+import pytest
+
+from repro.core.vsr import JPCG_MODULES, Module, access_counts, schedule
+
+
+def test_access_counts_match_paper():
+    """§5.5: naive 19 (14R+5W); paper VSR 14 (10R+4W); our min-traffic 13."""
+    c = access_counts()
+    assert c["naive"] == {"reads": 14, "writes": 5, "total": 19}
+    assert c["paper"] == {"reads": 10, "writes": 4, "total": 14}
+    assert c["min_traffic"] == {"reads": 9, "writes": 4, "total": 13}
+
+
+def test_three_phases():
+    """Fig. 5: scalar deps split the loop into exactly three phases."""
+    s = schedule(policy="paper")
+    assert len(s.phases) == 3
+    # Phase 1: SpMV + pap dot; phase 2 contains M4/M5/M6/M8; phase 3 M7/M3.
+    assert "M1_spmv" in s.phases[0] and "M2_dot_pap" in s.phases[0]
+    for m in ("M4_upd_r", "M5_div_z", "M6_dot_rz", "M8_dot_rr"):
+        assert m in s.phases[1], (m, s.phases)
+    assert "M7_upd_p" in s.phases[2] and "M3_upd_x" in s.phases[2]
+
+
+def test_z_never_stored():
+    """§5.3: z is recomputed in phase 3, never written to HBM."""
+    for pol in ("paper", "min_traffic"):
+        s = schedule(policy=pol)
+        assert "z" in s.never_stored
+        for w in s.hbm_writes:
+            assert "z" not in w
+
+
+def test_paper_policy_reruns_m4_m5():
+    s = schedule(policy="paper")
+    assert "M4_upd_r" in s.recomputed and "M5_div_z" in s.recomputed
+    # min_traffic drops the M4 re-run (stores r' straight out of phase 2)
+    s2 = schedule(policy="min_traffic")
+    assert "M4_upd_r" not in s2.recomputed
+
+
+def test_p_read_twice_phase1():
+    """§5.4: the SpMV's gather-ordered read of p cannot be stream-shared
+    with M2's row-ordered read — p appears twice in phase-1 reads."""
+    s = schedule(policy="paper")
+    assert list(s.hbm_reads[0]).count("p") == 2
+
+
+def test_within_phase_streaming():
+    """Vectors produced and consumed in the same phase ride streams."""
+    s = schedule(policy="paper")
+    assert "r'" in s.streamed[1]          # M4 -> M5/M6/M8 hand-off
+    assert "p" in s.streamed[2]           # one read shared by M7 and M3
+
+
+def test_unknown_policy_raises():
+    with pytest.raises(ValueError):
+        schedule(policy="bogus")
+
+
+def test_schedule_is_dataflow_derived():
+    """The analysis is computed, not hard-wired: removing the
+    preconditioner module (plain CG) still yields a legal schedule with
+    fewer accesses, and the scalar barrier structure persists."""
+    mods = tuple(m for m in JPCG_MODULES if m.name != "M5_div_z")
+    # rewire M6/M7 to read r' instead of z
+    def rewire(m: Module) -> Module:
+        reads = tuple("r'" if v == "z" else v for v in m.reads)
+        return Module(m.name, reads, m.writes, m.scalar_out, m.scalar_in,
+                      m.heavy)
+    mods = tuple(rewire(m) for m in mods)
+    s = schedule(mods, policy="min_traffic")
+    assert s.n_accesses < 13
+    assert len(s.phases) == 3
