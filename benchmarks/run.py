@@ -17,9 +17,10 @@ def main(argv=None):
     import jax
     jax.config.update("jax_enable_x64", True)
 
-    from benchmarks import (fig9_residual_traces, roofline_table,
-                            spmv_kernel, tab4_solver_time, tab5_throughput,
-                            tab7_iterations, vsr_access_counts)
+    from benchmarks import (batched_solver, fig9_residual_traces,
+                            roofline_table, spmv_kernel, tab4_solver_time,
+                            tab5_throughput, tab7_iterations,
+                            vsr_access_counts)
 
     sections = [
         ("§5.5 VSR access accounting (naive 19 -> 14 -> 13)",
@@ -34,6 +35,8 @@ def main(argv=None):
         ("Kernel: SpMV stream bytes per scheme", spmv_kernel.run,
          {"tier": args.tier}),
         ("Roofline: dry-run table (single pod)", roofline_table.run, {}),
+        ("Batched solver: systems/sec vs Python loop",
+         batched_solver.run, {}),
     ]
     for title, fn, kw in sections:
         print(f"\n=== {title} ===")

@@ -5,14 +5,17 @@ The paper's three contributions, as composable pieces:
 * :mod:`repro.core.precision` — Mix-V1/V2/V3 + TPU-tier schemes (§6);
 * :mod:`repro.core.vsr` — vector-streaming-reuse scheduling (§5);
 * :mod:`repro.core.phases` / :mod:`repro.core.cg` — the production solver;
+* :mod:`repro.core.batch` — batched multi-system JPCG (one compiled loop,
+  per-problem on-the-fly termination);
 * :mod:`repro.core.isa` / :mod:`repro.core.vm` — the stream-centric
   instruction set + VM (§3–4);
 * :mod:`repro.core.pipelined` — beyond-paper single-reduction CG;
 * :mod:`repro.core.gn` — matrix-free Gauss–Newton operators (CGGN bridge).
 """
 from repro.core.cg import CGResult, jpcg_solve
+from repro.core.batch import jpcg_solve_batched
 from repro.core.precision import SCHEMES, PrecisionScheme, get_scheme
 from repro.core.vsr import access_counts, schedule
 
-__all__ = ["CGResult", "jpcg_solve", "SCHEMES", "PrecisionScheme",
+__all__ = ["CGResult", "jpcg_solve", "jpcg_solve_batched", "SCHEMES", "PrecisionScheme",
            "get_scheme", "access_counts", "schedule"]

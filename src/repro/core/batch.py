@@ -1,0 +1,407 @@
+"""Batched multi-system JPCG — B independent solves in ONE compiled loop.
+
+The paper's Challenge 1 is "support an arbitrary problem and terminate
+acceleration processing on the fly"; the serving-scale version of that
+challenge is *many* arbitrary problems at once.  This module stacks B
+independent SPD systems along a leading batch axis and runs the
+three-phase VSR loop (:func:`repro.core.phases.vsr_iteration` — literally
+the same iteration code as the single-system solver) on all of them
+inside one ``lax.while_loop``:
+
+* every lane carries its own ``active`` flag; a lane terminates on the
+  fly at its own ``‖r‖² ≤ τ_g`` while the batch keeps iterating — its
+  ``x/r/p`` freeze (masked update) and only the live lanes pay for new
+  iterations being *observed* (the frozen lanes' arithmetic is dead
+  compute on a SIMD machine either way, exactly like frozen decode slots
+  in :class:`repro.serve.engine.DecodeEngine`);
+* the loop exits when every lane is done or ``maxiter`` is reached.
+
+Batch API
+---------
+>>> from repro.core.batch import jpcg_solve_batched
+>>> results = jpcg_solve_batched([a1, a2, ...], tol=1e-12)
+>>> results[0].x, results[0].iterations, results[0].converged
+
+``problems`` is a sequence of :class:`~repro.sparse.csr.CSRMatrix` (or
+square dense arrays); ``bs``/``x0s`` optionally give per-problem right-
+hand sides / starts (defaults: all-ones / all-zeros, the paper's §7.1
+protocol).  ``tol`` may be a scalar or a per-problem sequence.  Each
+returned :class:`~repro.core.cg.CGResult` matches what the single-system
+:func:`~repro.core.cg.jpcg_solve` would have produced for that lane (to
+scheme tolerance; iteration counts agree within ±1).
+
+Bucket policy / compile cache
+-----------------------------
+Heterogeneous problems are padded to a shared shape before stacking:
+every structural dimension (row blocks, slabs, slab length / ELL slots,
+col tiles) is rounded UP to a power-of-two bucket edge
+(:func:`repro.sparse.stacking.bucket_up`), so traffic whose sizes vary
+continuously collapses onto ``O(log n)`` distinct compiled shapes — the
+batched restatement of ``cg.py``'s "one compiled program per padded
+bucket".  Executables are held in an explicit cache keyed by
+``(backend, batch, bucket dims, scheme, maxiter, trace)``;
+:func:`batch_cache_info` exposes hit/miss counts so tests (and the
+serving engine) can assert reuse.
+
+Running the tests without ``hypothesis``
+----------------------------------------
+The tier-1 suite imports ``given/settings/strategies`` from
+``tests/_hyp.py``, which falls back to deterministic fixed-example
+sampling when the real ``hypothesis`` package is absent — so
+``PYTHONPATH=src python -m pytest -x -q`` runs green on a bare image;
+see ``tests/README.md``.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import List, NamedTuple, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.cg import CGResult
+from repro.core.phases import vsr_iteration
+from repro.core.precision import PrecisionScheme, get_scheme
+from repro.sparse.bell import csr_to_bell
+from repro.sparse.csr import CSRMatrix, csr_from_coo
+from repro.sparse.ellpack import csr_to_ellpack
+from repro.sparse.stacking import StackedEllpack, stack_ellpack, stack_flat
+
+__all__ = ["BatchedCGState", "jpcg_solve_batched", "batched_matvec_flat",
+           "batched_matvec_ellpack", "make_batched_stepper",
+           "batch_cache_info", "batch_cache_clear"]
+
+
+class BatchedCGState(NamedTuple):
+    """Per-lane CG state, leading axis = batch."""
+
+    k: jax.Array        # global loop counter (int32 scalar)
+    it: jax.Array       # int32[G] per-lane iteration counts
+    x: jax.Array        # [G, n] solutions (frozen once a lane converges)
+    r: jax.Array        # [G, n] residuals
+    p: jax.Array        # [G, n] search directions
+    rz: jax.Array       # [G]
+    rr: jax.Array       # [G] per-lane ‖r‖² — the termination scalars
+    active: jax.Array   # bool[G] live-lane mask
+    trace: jax.Array    # [G, maxiter] rr per iteration, or [G, 0]
+
+
+def _row_dot(a: jax.Array, b: jax.Array) -> jax.Array:
+    return jnp.sum(a * b, axis=-1)
+
+
+# --------------------------------------------------------------- matvecs
+def batched_matvec_flat(gcols, vals, rows, x, *, n_rows: int,
+                        padded_cols: int,
+                        scheme: PrecisionScheme) -> jax.Array:
+    """Batched SpMV over packed nonzero streams (the XLA backend's M1).
+
+    ``gcols/vals/rows`` are the [G, N] stacked streams of
+    :func:`repro.sparse.stacking.stack_flat`; ``x`` is [G, n_rows].
+    Gathers x per nonzero, multiplies at the scheme's accumulate dtype,
+    and segment-sums into rows — value-identical to
+    :func:`repro.core.operators.bell_spmv_jnp` lane by lane (same
+    products in the same flattened (block, slab, slot) order), but with
+    no [B, T, col_tile] x-tile intermediate, which matters when the
+    whole batch streams every iteration.
+    """
+    acc = scheme.spmv_acc_dtype
+    G = x.shape[0]
+    k = min(x.shape[-1], padded_cols)
+    x_in = x.astype(scheme.spmv_in_dtype)
+    x_pad = jnp.zeros((G, padded_cols), x_in.dtype).at[:, :k].set(x_in[:, :k])
+    xg = jnp.take_along_axis(x_pad, gcols, axis=1)
+    prod = vals.astype(acc) * xg.astype(acc)
+    seg = partial(jax.ops.segment_sum, num_segments=n_rows)
+    y = jax.vmap(seg)(prod, rows)
+    return y.astype(scheme.vector_dtype)
+
+
+def batched_matvec_ellpack(tile_cols, vals, local_cols, x, *,
+                           col_tile: int, n_col_tiles: int,
+                           scheme: PrecisionScheme,
+                           interpret: bool) -> jax.Array:
+    """Batched Pallas SpMV (one kernel launch for all G systems)."""
+    from repro.kernels.spmv import spmv_pallas_batched
+    G = x.shape[0]
+    padded_cols = n_col_tiles * col_tile
+    k = min(x.shape[-1], padded_cols)
+    x_pad = jnp.zeros((G, padded_cols), x.dtype).at[:, :k].set(x[:, :k])
+    x_tiles = x_pad.reshape(G, n_col_tiles, col_tile)
+    y = spmv_pallas_batched(tile_cols, vals, local_cols, x_tiles,
+                            scheme=scheme, interpret=interpret)
+    return y.reshape(G, -1)[:, : x.shape[-1]].astype(scheme.vector_dtype)
+
+
+# ------------------------------------------------------- loop construction
+def _batched_init(matvec, diag, b, x0, *, maxiter, scheme, with_trace,
+                  tol):
+    vd = scheme.vector_dtype
+    G = b.shape[0]
+    r = b - matvec(x0)
+    z = r / diag
+    p = z
+    rz = _row_dot(r, z)
+    rr = _row_dot(r, r)
+    trace = jnp.zeros((G, maxiter if with_trace else 0), dtype=vd)
+    return BatchedCGState(
+        k=jnp.zeros((), jnp.int32), it=jnp.zeros(G, jnp.int32),
+        x=x0, r=r, p=p, rz=rz, rr=rr, active=rr > tol, trace=trace)
+
+
+def _batched_body(matvec, diag, tol, maxiter_vec=None):
+    """Masked VSR iteration over all lanes.
+
+    Frozen (converged) lanes still flow through the arithmetic — that is
+    free on a SIMD device — but every state write is gated on ``active``,
+    so their ``x`` stops updating the iteration they converge.  Division
+    garbage a frozen lane may produce (0/0 in alpha/beta) is discarded by
+    the same gates: ``where`` selects, it never blends.
+    """
+
+    def body(s: BatchedCGState) -> BatchedCGState:
+        x_new, r_new, p_new, rz_new, rr_new = vsr_iteration(
+            matvec, diag, s.x, s.r, s.p, s.rz, dot=_row_dot)
+        keep = s.active
+        kv = keep[:, None]
+        x = jnp.where(kv, x_new, s.x)
+        r = jnp.where(kv, r_new, s.r)
+        p = jnp.where(kv, p_new, s.p)
+        rz = jnp.where(keep, rz_new, s.rz)
+        rr = jnp.where(keep, rr_new, s.rr)
+        it = s.it + keep.astype(jnp.int32)
+        if s.trace.shape[1]:
+            trace = s.trace.at[:, s.k].set(jnp.where(keep, rr_new,
+                                                     s.trace[:, s.k]))
+        else:
+            trace = s.trace
+        active = keep & (rr > tol)
+        if maxiter_vec is not None:
+            active = active & (it < maxiter_vec)
+        return BatchedCGState(k=s.k + 1, it=it, x=x, r=r, p=p, rz=rz,
+                              rr=rr, active=active, trace=trace)
+
+    return body
+
+
+# ------------------------------------------------------------ compile cache
+_CACHE: dict = {}
+_CACHE_STATS = {"hits": 0, "misses": 0}
+
+
+def batch_cache_info() -> dict:
+    """Executable-cache statistics: {entries, hits, misses}."""
+    return {"entries": len(_CACHE), **_CACHE_STATS}
+
+
+def batch_cache_clear() -> None:
+    _CACHE.clear()
+    _CACHE_STATS.update(hits=0, misses=0)
+
+
+def _cached(key, make):
+    fn = _CACHE.get(key)
+    if fn is None:
+        _CACHE_STATS["misses"] += 1
+        fn = _CACHE[key] = make()
+    else:
+        _CACHE_STATS["hits"] += 1
+    return fn
+
+
+def _matvec_factory(*, backend, scheme, block_rows, col_tile, n_col_tiles,
+                    n_row_blocks, interpret):
+    """``matvec_of(mat) -> matvec`` closure for one backend + bucket shape.
+
+    Shared by the solve-to-completion runner and the serving stepper so
+    both paths are guaranteed to compute the same M1.
+    """
+    if backend == "xla":
+        def matvec_of(mat):
+            gc, v, rw = mat
+            return lambda x: batched_matvec_flat(
+                gc, v, rw, x, n_rows=n_row_blocks * block_rows,
+                padded_cols=n_col_tiles * col_tile, scheme=scheme)
+    elif backend == "pallas":
+        def matvec_of(mat):
+            tc, v, lc = mat
+            return lambda x: batched_matvec_ellpack(
+                tc, v, lc, x, col_tile=col_tile, n_col_tiles=n_col_tiles,
+                scheme=scheme, interpret=interpret)
+    else:
+        raise ValueError(f"unknown backend {backend!r}")
+    return matvec_of
+
+
+def _make_runner(*, backend, scheme, maxiter, with_trace, block_rows,
+                 col_tile, n_col_tiles, n_row_blocks, interpret):
+    """Build the jitted solve-to-completion runner for one bucket shape."""
+    matvec_of = _matvec_factory(
+        backend=backend, scheme=scheme, block_rows=block_rows,
+        col_tile=col_tile, n_col_tiles=n_col_tiles,
+        n_row_blocks=n_row_blocks, interpret=interpret)
+
+    @jax.jit
+    def run(mat, diag, b, x0, tol):
+        matvec = matvec_of(mat)
+        st = _batched_init(matvec, diag, b, x0, maxiter=maxiter,
+                           scheme=scheme, with_trace=with_trace, tol=tol)
+        body = _batched_body(matvec, diag, tol)
+
+        def cond(s):
+            return (s.k < maxiter) & jnp.any(s.active)
+
+        return jax.lax.while_loop(cond, body, st)
+
+    return run
+
+
+def make_batched_stepper(*, backend, scheme, block_rows, col_tile,
+                         n_col_tiles, n_row_blocks, chunk, interpret=False):
+    """Jitted bounded stepper for incremental serving (SolverEngine).
+
+    Runs at most ``chunk`` iterations of the masked batched loop from a
+    given state; per-lane iteration budgets come in as ``maxiter_vec``
+    (lanes admitted at different times carry different budgets).
+    Returns ``fn(mat, diag, state, tol, maxiter_vec) -> state``.
+    """
+    scheme = get_scheme(scheme)
+    key = ("step", backend, scheme.name, block_rows, col_tile, n_col_tiles,
+           n_row_blocks, chunk, interpret)
+
+    def make():
+        matvec_of = _matvec_factory(
+            backend=backend, scheme=scheme, block_rows=block_rows,
+            col_tile=col_tile, n_col_tiles=n_col_tiles,
+            n_row_blocks=n_row_blocks, interpret=interpret)
+
+        @jax.jit
+        def step(mat, diag, state, tol, maxiter_vec):
+            matvec = matvec_of(mat)
+            body = _batched_body(matvec, diag, tol, maxiter_vec)
+            start = state.k
+
+            def cond(s):
+                return (s.k - start < chunk) & jnp.any(s.active)
+
+            return jax.lax.while_loop(cond, body, state)
+
+        return step
+
+    return _cached(key, make)
+
+
+# ---------------------------------------------------------------- public
+def _as_csr(a) -> CSRMatrix:
+    if isinstance(a, CSRMatrix):
+        return a
+    arr = np.asarray(a)
+    if arr.ndim == 2 and arr.shape[0] == arr.shape[1]:
+        rows, cols = np.nonzero(arr)
+        return csr_from_coo(rows, cols, arr[rows, cols], arr.shape)
+    raise TypeError(f"cannot batch-solve a {type(a)}")
+
+
+def _pad_stack(vecs: Sequence[np.ndarray], n_pad: int, fill: float,
+               dtype) -> jnp.ndarray:
+    out = np.full((len(vecs), n_pad), fill, dtype=np.float64)
+    for g, v in enumerate(vecs):
+        out[g, : v.shape[0]] = np.asarray(v, dtype=np.float64)
+    return jnp.asarray(out, dtype=dtype)
+
+
+def jpcg_solve_batched(problems: Sequence, bs: Optional[Sequence] = None,
+                       x0s: Optional[Sequence] = None, *,
+                       tol=1e-12, maxiter: int = 20_000,
+                       scheme="mixed_v3", backend: str = "xla",
+                       block_rows: int = 256, col_tile: int = 512,
+                       bucket: bool = True, with_trace: bool = False,
+                       interpret: Optional[bool] = None) -> List[CGResult]:
+    """Solve B independent SPD systems in one compiled ``lax.while_loop``.
+
+    See the module docstring for the batch API and bucket policy.  Lanes
+    terminate on the fly at their own ``‖r‖² ≤ tol_g``; the compiled loop
+    runs until every lane converged or ``maxiter``.
+    """
+    scheme = get_scheme(scheme)
+    if (scheme.vector_dtype == jnp.float64
+            and not jax.config.read("jax_enable_x64")):
+        raise RuntimeError(
+            f"scheme {scheme.name!r} needs fp64 vectors: enable x64 first "
+            "or use a TPU-tier scheme (tpu_v3, ...).")
+    csrs = [_as_csr(a) for a in problems]
+    G = len(csrs)
+    if G == 0:
+        return []
+    if interpret is None:
+        from repro.kernels.ops import default_interpret
+        interpret = default_interpret()
+
+    if backend == "xla":
+        stacked = stack_flat(
+            [csr_to_bell(a, block_rows=block_rows, col_tile=col_tile)
+             for a in csrs], bucket=bucket)
+        mat = (jnp.asarray(stacked.gcols),
+               jnp.asarray(stacked.vals).astype(scheme.matrix_dtype),
+               jnp.asarray(stacked.rows))
+        n_row_blocks = stacked.n_row_blocks
+        bucket_dims = (stacked.n_row_blocks, stacked.vals.shape[1])
+    elif backend == "pallas":
+        stacked_e: StackedEllpack = stack_ellpack(
+            [csr_to_ellpack(a, block_rows=block_rows, col_tile=col_tile)
+             for a in csrs], bucket=bucket)
+        mat = (jnp.asarray(stacked_e.tile_cols),
+               jnp.asarray(stacked_e.vals).astype(scheme.matrix_dtype),
+               jnp.asarray(stacked_e.local_cols))
+        stacked = stacked_e
+        n_row_blocks = stacked_e.vals.shape[1]
+        bucket_dims = stacked_e.vals.shape[1:]
+    else:
+        raise ValueError(f"unknown backend {backend!r}")
+
+    vd = scheme.vector_dtype
+    n_pad = stacked.padded_rows
+    ns = [s[0] for s in stacked.shapes]
+    # Padded rows get a unit diagonal and zero rhs: their residual is
+    # identically zero, so they never influence rr or termination.
+    diag = _pad_stack([a.diagonal() for a in csrs], n_pad, 1.0, vd)
+    bs = list(bs) if bs is not None else [np.ones(n) for n in ns]
+    x0s = list(x0s) if x0s is not None else [np.zeros(n) for n in ns]
+    for name, seq in (("bs", bs), ("x0s", x0s)):
+        if len(seq) != G:
+            raise ValueError(f"{name} has {len(seq)} entries for {G} problems")
+        for g, v in enumerate(seq):
+            if np.shape(v) != (ns[g],):
+                raise ValueError(
+                    f"{name}[{g}] has shape {np.shape(v)}, expected "
+                    f"({ns[g]},) for problem {g}")
+    b = _pad_stack(bs, n_pad, 0.0, vd)
+    x0 = _pad_stack(x0s, n_pad, 0.0, vd)
+    if np.ndim(tol) == 0:
+        tol_vec = jnp.full(G, float(tol), vd)
+    else:
+        if len(tol) != G:
+            raise ValueError(f"tol has {len(tol)} entries for {G} problems")
+        tol_vec = jnp.asarray(np.asarray(tol, np.float64), vd)
+
+    key = ("solve", backend, scheme.name, G, bucket_dims, block_rows,
+           col_tile, stacked.n_col_tiles, maxiter, with_trace, interpret)
+    run = _cached(key, lambda: _make_runner(
+        backend=backend, scheme=scheme, maxiter=maxiter,
+        with_trace=with_trace, block_rows=block_rows, col_tile=col_tile,
+        n_col_tiles=stacked.n_col_tiles, n_row_blocks=n_row_blocks,
+        interpret=interpret))
+    st = run(mat, diag, b, x0, tol_vec)
+
+    its = np.asarray(st.it)
+    rrs = np.asarray(st.rr)
+    tols = np.asarray(tol_vec)
+    results = []
+    for g in range(G):
+        trace = (np.asarray(st.trace[g])[: its[g]] if with_trace else None)
+        results.append(CGResult(
+            x=st.x[g, : ns[g]], iterations=int(its[g]), rr=float(rrs[g]),
+            converged=bool(rrs[g] <= tols[g]), residual_trace=trace,
+            scheme=scheme.name, method="vsr_batched"))
+    return results

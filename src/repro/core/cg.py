@@ -23,6 +23,10 @@ the same padded bucket, and termination is decided on the fly inside the
   * ``"xla"``    — pure-jnp phase ops (runs everywhere; default);
   * ``"pallas"`` — Pallas kernels for SpMV + fused phases (TPU layout;
     ``interpret=True`` on CPU).
+
+For solving MANY independent systems per compiled call (the serving
+path), see :func:`repro.core.batch.jpcg_solve_batched` — also reachable
+as ``repro.core.cg.jpcg_solve_batched``.
 """
 from __future__ import annotations
 
@@ -39,7 +43,16 @@ from repro.core import pipelined as _pipe
 from repro.core.operators import as_operator
 from repro.core.precision import get_scheme
 
-__all__ = ["CGResult", "jpcg_solve"]
+__all__ = ["CGResult", "jpcg_solve", "jpcg_solve_batched"]
+
+
+def __getattr__(name):
+    # Lazy: batch.py imports CGResult from here, so the batched entry
+    # point is resolved on first touch to avoid an import cycle.
+    if name == "jpcg_solve_batched":
+        from repro.core.batch import jpcg_solve_batched
+        return jpcg_solve_batched
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
 
 
 @dataclasses.dataclass

@@ -32,7 +32,7 @@ import jax.numpy as jnp
 
 from repro.core.precision import PrecisionScheme
 
-__all__ = ["CGState", "jpcg_loop", "init_state"]
+__all__ = ["CGState", "jpcg_loop", "init_state", "vsr_iteration"]
 
 
 class CGState(NamedTuple):
@@ -47,6 +47,34 @@ class CGState(NamedTuple):
 
 def _dot(a: jax.Array, b: jax.Array) -> jax.Array:
     return jnp.dot(a, b)
+
+
+def vsr_iteration(matvec, diag, x, r, p, rz, *, dot=_dot):
+    """One VSR-scheduled JPCG iteration (phases 1–3) on raw vectors.
+
+    Shared by the single-system loop below and the batched engine
+    (:mod:`repro.core.batch`), which passes a row-wise ``dot`` and
+    vectors carrying a leading batch axis — the phase dataflow is
+    literally the same code, so the two paths cannot drift.
+
+    Returns ``(x', r', p', rz', rr')``.
+    """
+    # ---- Phase 1: M1 (SpMV), M2 (dot) -> alpha ----
+    ap = matvec(p)
+    pap = dot(p, ap)
+    alpha = rz / pap
+    al = alpha[..., None] if jnp.ndim(alpha) else alpha
+    # ---- Phase 2: M4, M8, M5, M6 -> beta ----
+    r_new = r - al * ap
+    rr_new = dot(r_new, r_new)           # M8 hoisted: early termination
+    z = r_new / diag                     # M5 (never stored)
+    rz_new = dot(r_new, z)               # M6
+    beta = rz_new / rz
+    be = beta[..., None] if jnp.ndim(beta) else beta
+    # ---- Phase 3: M7, M3 ----
+    p_new = z + be * p
+    x_new = x + al * p
+    return x_new, r_new, p_new, rz_new, rr_new
 
 
 def init_state(matvec, diag, b, x0, *, maxiter: int,
@@ -81,19 +109,8 @@ def jpcg_loop(matvec, diag, state: CGState, *, tol: float, maxiter: int,
         return (s.i < maxiter) & (s.rr > tol)
 
     def body_jnp(s: CGState) -> CGState:
-        # ---- Phase 1: M1 (SpMV), M2 (dot) -> alpha ----
-        ap = matvec(s.p)
-        pap = _dot(s.p, ap)
-        alpha = s.rz / pap
-        # ---- Phase 2: M4, M8, M5, M6 -> beta ----
-        r_new = s.r - alpha * ap
-        rr_new = _dot(r_new, r_new)          # M8 hoisted: early termination
-        z = r_new / diag                     # M5 (never stored)
-        rz_new = _dot(r_new, z)              # M6
-        beta = rz_new / s.rz
-        # ---- Phase 3: M7, M3 ----
-        p_new = z + beta * s.p
-        x_new = s.x + alpha * s.p
+        x_new, r_new, p_new, rz_new, rr_new = vsr_iteration(
+            matvec, diag, s.x, s.r, s.p, s.rz)
         trace = s.trace.at[s.i].set(rr_new) if s.trace.shape[0] else s.trace
         return CGState(i=s.i + 1, x=x_new, r=r_new, p=p_new, rz=rz_new,
                        rr=rr_new, trace=trace)

@@ -1,0 +1,15 @@
+"""Version compatibility for the Pallas TPU API surface.
+
+``pltpu.TPUCompilerParams`` was renamed ``pltpu.CompilerParams`` upstream;
+kernels import the name from here so one repo runs on both sides of the
+rename.
+"""
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["CompilerParams"]
+
+CompilerParams = getattr(pltpu, "CompilerParams", None)
+if CompilerParams is None:  # pre-rename JAX
+    CompilerParams = pltpu.TPUCompilerParams

@@ -24,6 +24,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels._compat import CompilerParams
+
 __all__ = ["dot_pallas", "dot3_pallas", "DOT_BLOCK"]
 
 #: rows × lanes of one grid-step tile (8 sublanes × 512 lanes of fp32).
@@ -70,7 +72,7 @@ def dot_pallas(a: jax.Array, b: jax.Array, *, acc_dtype=jnp.float32,
         out_specs=pl.BlockSpec((1, 1), lambda i: (0, 0)),
         out_shape=jax.ShapeDtypeStruct((1, 1), acc_dtype),
         scratch_shapes=[pltpu.VMEM((rows, lanes), acc_dtype)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("arbitrary",)),
         interpret=interpret,
     )(ap, bp)
@@ -116,7 +118,7 @@ def dot3_pallas(r: jax.Array, u: jax.Array, w: jax.Array, *,
         out_specs=pl.BlockSpec((1, 3), lambda i: (0, 0)),
         out_shape=jax.ShapeDtypeStruct((1, 3), acc_dtype),
         scratch_shapes=[pltpu.VMEM((rows, lanes), acc_dtype)] * 3,
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("arbitrary",)),
         interpret=interpret,
     )(rp, up, wp)

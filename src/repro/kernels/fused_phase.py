@@ -29,6 +29,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels._compat import CompilerParams
+
 from repro.kernels.dot import DOT_BLOCK, _pad2d
 
 __all__ = ["phase2_pallas", "phase3_pallas"]
@@ -84,7 +86,7 @@ def phase2_pallas(alpha: jax.Array, r: jax.Array, ap: jax.Array,
         out_shape=[jax.ShapeDtypeStruct((nb, rows, lanes), dt),
                    jax.ShapeDtypeStruct((1, 2), dt)],
         scratch_shapes=[pltpu.VMEM((rows, lanes), dt)] * 2,
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("arbitrary",)),
         interpret=interpret,
     )(a2, rp, app, mp)
@@ -130,7 +132,7 @@ def phase3_pallas(alpha: jax.Array, beta: jax.Array, r_new: jax.Array,
                    pl.BlockSpec((1, rows, lanes), lambda i: (i, 0, 0))],
         out_shape=[jax.ShapeDtypeStruct((nb, rows, lanes), dt),
                    jax.ShapeDtypeStruct((nb, rows, lanes), dt)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("arbitrary",)),
         interpret=interpret,
     )(ab, rp, mp, pp, xp)

@@ -37,9 +37,11 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels._compat import CompilerParams
+
 from repro.core.precision import PrecisionScheme
 
-__all__ = ["spmv_pallas"]
+__all__ = ["spmv_pallas", "spmv_pallas_batched"]
 
 
 def _spmv_kernel(tile_cols_ref, vals_ref, lcols_ref, x_ref, y_ref, *,
@@ -92,7 +94,67 @@ def spmv_pallas(tile_cols: jax.Array, vals: jax.Array, local_cols: jax.Array,
         functools.partial(_spmv_kernel, acc_dtype=acc),
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((B, R), acc),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "arbitrary")),
+        interpret=interpret,
+    )(tile_cols, vals, local_cols, x_in)
+
+
+def _spmv_kernel_batched(tile_cols_ref, vals_ref, lcols_ref, x_ref, y_ref, *,
+                         acc_dtype):
+    """One (system g, row-block i, slab t) grid step of the batched SpMV."""
+    t = pl.program_id(2)
+
+    @pl.when(t == 0)
+    def _init():
+        y_ref[...] = jnp.zeros_like(y_ref)
+
+    x_tile = x_ref[0, 0]                    # [C] spmv_in_dtype
+    vals = vals_ref[0, 0, 0]                # [E, R] matrix_dtype
+    lcols = lcols_ref[0, 0, 0]              # [E, R] int32
+    xg = jnp.take(x_tile, lcols.reshape(-1), axis=0,
+                  indices_are_sorted=False, unique_indices=False,
+                  mode="clip").reshape(vals.shape)
+    prod = vals.astype(acc_dtype) * xg.astype(acc_dtype)
+    y_ref[...] += jnp.sum(prod, axis=0)[None, None, :]
+
+
+@functools.partial(jax.jit, static_argnames=("scheme", "interpret"))
+def spmv_pallas_batched(tile_cols: jax.Array, vals: jax.Array,
+                        local_cols: jax.Array, x_tiles: jax.Array, *,
+                        scheme: PrecisionScheme,
+                        interpret: bool = False) -> jax.Array:
+    """Batch-of-systems banked-ELLPACK SpMV — one kernel, G independent A·x.
+
+    The multi-system spelling of :func:`spmv_pallas`: a leading *batch*
+    grid dimension walks the G stacked systems, so one Mosaic executable
+    serves the whole batch (the batched engine's per-iteration M1).
+
+    tile_cols int32[G, B, T] — per-system scalar-prefetched memory-
+    instruction streams; vals scheme.matrix_dtype[G, B, T, E, R];
+    local_cols int32[G, B, T, E, R]; x_tiles [G, n_col_tiles, C].
+    Returns acc_dtype[G, B, R].
+    """
+    G, B, T, E, R = vals.shape
+    C = x_tiles.shape[-1]
+    acc = scheme.spmv_acc_dtype
+    x_in = x_tiles.astype(scheme.spmv_in_dtype)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(G, B, T),
+        in_specs=[
+            pl.BlockSpec((1, 1, 1, E, R), lambda g, i, t, tc: (g, i, t, 0, 0)),
+            pl.BlockSpec((1, 1, 1, E, R), lambda g, i, t, tc: (g, i, t, 0, 0)),
+            pl.BlockSpec((1, 1, C), lambda g, i, t, tc: (g, tc[g, i, t], 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, R), lambda g, i, t, tc: (g, i, 0)),
+    )
+    return pl.pallas_call(
+        functools.partial(_spmv_kernel_batched, acc_dtype=acc),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((G, B, R), acc),
+        compiler_params=CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(tile_cols, vals, local_cols, x_in)

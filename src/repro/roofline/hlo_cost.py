@@ -370,7 +370,14 @@ def walk_hlo(text: str, *, default_group: int = 1,
                         m = re.search(attr + r"=%?([\w.\-]+)", ins.rest)
                         if m:
                             out.add(cost_of(m.group(1), inside_fusion), 0.5)
-            elif op in ("call", "custom-call", "reduce", "sort", "scatter",
+            elif op == "call":
+                # A call is NOT a fusion: its callee's top-level fusions
+                # still stream HBM (the CPU backend wraps loop bodies in
+                # %parallel_* call shims) — keep the fusion flag as-is.
+                m = _CALLS.search(ins.rest)
+                if m and m.group(1) in comps:
+                    out.add(cost_of(m.group(1), inside_fusion))
+            elif op in ("custom-call", "reduce", "sort", "scatter",
                         "select-and-scatter", "map", "reduce-window"):
                 m = _CALLS.search(ins.rest)
                 if m and m.group(1) in comps and op != "custom-call":

@@ -1,11 +1,14 @@
 """Serving substrate: KV/state caches + slot-based batched decode engine
-(+ int8 quantized cache — Mix-V3 one tier further)."""
+(+ int8 quantized cache — Mix-V3 one tier further; + slot-based batched
+CG solver engine — continuous batching for linear systems)."""
 from repro.serve.engine import DecodeEngine, EngineConfig
 from repro.serve.kv_cache import (bytes_per_slot, cache_bytes, init_cache,
                                   slot_insert, slot_view)
+from repro.serve.solver_engine import SolverEngine, SolverEngineConfig
 from repro.serve.quant_cache import (QuantAttnCache, attn_decode_quant,
                                      init_quant_cache)
 
-__all__ = ["DecodeEngine", "EngineConfig", "bytes_per_slot", "cache_bytes",
+__all__ = ["DecodeEngine", "EngineConfig", "SolverEngine",
+           "SolverEngineConfig", "bytes_per_slot", "cache_bytes",
            "init_cache", "slot_insert", "slot_view", "QuantAttnCache",
            "attn_decode_quant", "init_quant_cache"]

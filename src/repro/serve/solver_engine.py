@@ -1,0 +1,314 @@
+"""Slot-based CG solver engine — continuous batching for linear systems.
+
+The solver twin of :class:`repro.serve.engine.DecodeEngine`: a fixed pool
+of ``batch_slots`` problem slots iterates in lock-step (one jitted
+chunked tick over the whole batch), and slots are independent — each
+carries its own tolerance, iteration budget, and ``active`` flag, so a
+new system can be admitted the moment an old one converges, without
+disturbing in-flight lanes (their state is frozen by the same masked
+updates the batched solver uses).
+
+Admission (:meth:`SolverEngine.submit`) pads the problem's banked-ELL
+arrays into a free slot of the engine's shared *bucket* shape and runs
+the JPCG warm-up (r₀ = b − A·x₀, z₀ = M⁻¹r₀) for that lane only.  The
+bucket is sized lazily from the first admitted problem (dimensions
+rounded up to power-of-two edges, :func:`repro.sparse.stacking.bucket_up`)
+and grows — with one recompile — only when a larger problem arrives, so
+steady traffic of similar systems reuses a single executable, exactly
+the compile-cache policy of :mod:`repro.core.batch`.
+
+>>> eng = SolverEngine(SolverEngineConfig(batch_slots=8, block_rows=8,
+...                                       col_tile=128))
+>>> rid = eng.submit(a, tol=1e-12)
+>>> done = eng.run_to_completion()          # {rid: CGResult}
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.batch import (BatchedCGState, _as_csr, batched_matvec_flat,
+                              batched_matvec_ellpack, make_batched_stepper)
+from repro.core.cg import CGResult
+from repro.core.precision import get_scheme
+from repro.sparse.bell import csr_to_bell
+from repro.sparse.ellpack import csr_to_ellpack
+from repro.sparse.stacking import bucket_up, flatten_bell, pad_ellpack
+
+__all__ = ["SolverEngineConfig", "SolverEngine"]
+
+
+@dataclasses.dataclass(frozen=True)
+class SolverEngineConfig:
+    batch_slots: int = 8
+    scheme: str = "mixed_v3"
+    tol: float = 1e-12                # default; per-request override
+    maxiter: int = 20_000             # default; per-request override
+    chunk_iters: int = 64             # iterations per tick
+    block_rows: int = 256
+    col_tile: int = 512
+    backend: str = "xla"              # "xla" | "pallas"
+    interpret: Optional[bool] = None  # pallas backend: None = auto
+
+
+@partial(jax.jit, static_argnames=("n_rows", "padded_cols", "scheme"))
+def _lane_init_flat(gc, v, rw, diag, b, x0, *, n_rows, padded_cols, scheme):
+    """JPCG warm-up for one lane (Alg. 1 lines 1–5, batch-of-one view)."""
+    y = batched_matvec_flat(gc[None], v[None], rw[None], x0[None],
+                            n_rows=n_rows, padded_cols=padded_cols,
+                            scheme=scheme)[0]
+    r = b - y
+    z = r / diag
+    return r, z, jnp.dot(r, z), jnp.dot(r, r)
+
+
+@partial(jax.jit, static_argnames=("col_tile", "n_col_tiles", "scheme",
+                                   "interpret"))
+def _lane_init_ell(tc, v, lc, diag, b, x0, *, col_tile, n_col_tiles,
+                   scheme, interpret):
+    y = batched_matvec_ellpack(tc[None], v[None], lc[None], x0[None],
+                               col_tile=col_tile, n_col_tiles=n_col_tiles,
+                               scheme=scheme, interpret=interpret)[0]
+    r = b - y
+    z = r / diag
+    return r, z, jnp.dot(r, z), jnp.dot(r, r)
+
+
+class SolverEngine:
+    """Admit SPD systems into batch slots; solve them in shared ticks."""
+
+    def __init__(self, cfg: SolverEngineConfig):
+        self.cfg = cfg
+        self.scheme = get_scheme(cfg.scheme)
+        if cfg.interpret is None:
+            from repro.kernels.ops import default_interpret
+            self.interpret = default_interpret()
+        else:
+            self.interpret = cfg.interpret
+        S = cfg.batch_slots
+        self._req_of_slot: list = [None] * S     # request id or None
+        self._n_of_slot = np.zeros(S, np.int64)  # logical n per slot
+        self._next_id = 0
+        self._bucket = None                      # (B, T, L, n_tiles)
+        self._mat = None                         # stacked device arrays
+        self._state: Optional[BatchedCGState] = None
+        self._diag = None
+        self._tol = None
+        self._maxiter_vec = None
+        self.results: Dict[int, CGResult] = {}
+
+    # ------------------------------------------------------------ sizing
+    def _dims_of(self, m):
+        """Bucket signature: (row blocks, stream/slot dims..., col tiles).
+
+        xla uses the flat stream — (blocks, stream length, tiles); pallas
+        keeps the slot-major structure — (blocks, slabs, ell, tiles).
+        """
+        if self.cfg.backend == "xla":
+            return (m.n_row_blocks, m.stored_entries, m.n_col_tiles)
+        return (m.n_row_blocks, m.n_slabs, m.ell, m.n_col_tiles)
+
+    def _alloc(self, dims):
+        """Allocate (or grow) the slot-stacked arrays for bucket ``dims``."""
+        S = self.cfg.batch_slots
+        B, n_tiles = dims[0], dims[-1]
+        vd = self.scheme.vector_dtype
+        md = self.scheme.matrix_dtype
+        n_pad = B * self.cfg.block_rows
+        old_mat, old_state = self._mat, self._state
+
+        if self.cfg.backend == "xla":
+            N = dims[1]
+            # zero padding entries are (col 0, val 0, row 0): harmless
+            mat = (jnp.zeros((S, N), jnp.int32), jnp.zeros((S, N), md),
+                   jnp.zeros((S, N), jnp.int32))
+        else:
+            _, T, L, _ = dims
+            R = self.cfg.block_rows
+            mat = (jnp.zeros((S, B, T), jnp.int32),
+                   jnp.zeros((S, B, T, L, R), md),
+                   jnp.zeros((S, B, T, L, R), jnp.int32))
+        diag = jnp.ones((S, n_pad), vd)
+        zeros = jnp.zeros((S, n_pad), vd)
+        state = BatchedCGState(
+            k=jnp.zeros((), jnp.int32), it=jnp.zeros(S, jnp.int32),
+            x=zeros, r=zeros, p=zeros, rz=jnp.zeros(S, vd),
+            rr=jnp.zeros(S, vd), active=jnp.zeros(S, bool),
+            trace=jnp.zeros((S, 0), vd))
+        tol = jnp.full(S, self.cfg.tol, vd)
+        maxiter_vec = jnp.zeros(S, jnp.int32)
+
+        if old_mat is not None:
+            # Growing the bucket: copy every old lane into the new arrays.
+            def grow(new, old):
+                pads = [(0, n - o) for n, o in zip(new.shape, old.shape)]
+                return jnp.pad(old, pads)
+            mat = tuple(grow(n, o) for n, o in zip(mat, old_mat))
+            diag = diag.at[:, : old_state.x.shape[1]].set(self._diag)
+            state = BatchedCGState(
+                k=old_state.k, it=old_state.it,
+                x=zeros.at[:, : old_state.x.shape[1]].set(old_state.x),
+                r=zeros.at[:, : old_state.r.shape[1]].set(old_state.r),
+                p=zeros.at[:, : old_state.p.shape[1]].set(old_state.p),
+                rz=old_state.rz, rr=old_state.rr, active=old_state.active,
+                trace=state.trace)
+            tol, maxiter_vec = self._tol, self._maxiter_vec
+        self._bucket = dims
+        self._mat = mat
+        self._diag = diag
+        self._state = state
+        self._tol = tol
+        self._maxiter_vec = maxiter_vec
+
+    # ------------------------------------------------------------ public
+    @property
+    def free_slots(self) -> int:
+        return sum(r is None for r in self._req_of_slot)
+
+    @property
+    def active_count(self) -> int:
+        return 0 if self._state is None else int(self._state.active.sum())
+
+    def submit(self, a, b=None, x0=None, *, tol: Optional[float] = None,
+               maxiter: Optional[int] = None) -> int:
+        """Admit one SPD system into a free slot; returns the request id."""
+        self._harvest()        # a lane done since the last tick frees its slot
+        free = [s for s, r in enumerate(self._req_of_slot) if r is None]
+        if not free:
+            raise RuntimeError("no free solver slots")
+        s = free[0]
+        cfg = self.cfg
+        a = _as_csr(a)
+        if cfg.backend == "xla":
+            m = csr_to_bell(a, block_rows=cfg.block_rows,
+                            col_tile=cfg.col_tile)
+        else:
+            m = csr_to_ellpack(a, block_rows=cfg.block_rows,
+                               col_tile=cfg.col_tile)
+        dims = tuple(bucket_up(d) for d in self._dims_of(m))
+        if self._bucket is None or any(d > o for d, o in
+                                       zip(dims, self._bucket)):
+            grown = dims if self._bucket is None else tuple(
+                max(d, o) for d, o in zip(dims, self._bucket))
+            self._alloc(grown)
+        if cfg.backend == "xla":
+            gc, v, rw = flatten_bell(m)
+            N = self._bucket[1]
+            lanes = tuple(np.pad(x, (0, N - x.shape[0]))
+                          for x in (gc, v, rw))
+        else:
+            B, T, L, _ = self._bucket
+            m = pad_ellpack(m, n_row_blocks=B, n_slabs=T, ell=L)
+            lanes = (m.tile_cols, m.vals, m.local_cols)
+        self._mat = tuple(
+            arr.at[s].set(jnp.asarray(lane).astype(arr.dtype))
+            for arr, lane in zip(self._mat, lanes))
+
+        vd = self.scheme.vector_dtype
+        n = a.shape[0]
+        n_pad = self._diag.shape[1]
+        d = np.ones(n_pad)
+        d[:n] = a.diagonal()
+        bb = np.zeros(n_pad)
+        bb[:n] = np.ones(n) if b is None else np.asarray(b)
+        xx = np.zeros(n_pad)
+        if x0 is not None:
+            xx[:n] = np.asarray(x0)
+        diag_l = jnp.asarray(d, vd)
+        b_l = jnp.asarray(bb, vd)
+        x0_l = jnp.asarray(xx, vd)
+        self._diag = self._diag.at[s].set(diag_l)
+
+        n_tiles = self._bucket[-1]
+        if cfg.backend == "xla":
+            gc, v, rw = (arr[s] for arr in self._mat)
+            r, z, rz, rr = _lane_init_flat(
+                gc, v, rw, diag_l, b_l, x0_l, n_rows=n_pad,
+                padded_cols=n_tiles * cfg.col_tile, scheme=self.scheme)
+        else:
+            tc, v, lc = (arr[s] for arr in self._mat)
+            r, z, rz, rr = _lane_init_ell(
+                tc, v, lc, diag_l, b_l, x0_l, col_tile=cfg.col_tile,
+                n_col_tiles=n_tiles, scheme=self.scheme,
+                interpret=self.interpret)
+
+        st = self._state
+        req_tol = jnp.asarray(cfg.tol if tol is None else tol, vd)
+        self._state = BatchedCGState(
+            k=st.k, it=st.it.at[s].set(0),
+            x=st.x.at[s].set(x0_l), r=st.r.at[s].set(r),
+            p=st.p.at[s].set(z), rz=st.rz.at[s].set(rz),
+            rr=st.rr.at[s].set(rr),
+            active=st.active.at[s].set(rr > req_tol), trace=st.trace)
+        self._tol = self._tol.at[s].set(req_tol)
+        self._maxiter_vec = self._maxiter_vec.at[s].set(
+            cfg.maxiter if maxiter is None else maxiter)
+
+        rid = self._next_id
+        self._next_id += 1
+        self._req_of_slot[s] = rid
+        self._n_of_slot[s] = n
+        return rid
+
+    def step(self) -> Dict[int, CGResult]:
+        """One chunked tick (≤ ``chunk_iters`` iterations for every live
+        lane); harvests and frees slots that finished, returning
+        ``{request_id: CGResult}``."""
+        if self._state is None or not bool(self._state.active.any()):
+            return self._harvest()
+        cfg = self.cfg
+        stepper = make_batched_stepper(
+            backend=cfg.backend, scheme=self.scheme,
+            block_rows=cfg.block_rows, col_tile=cfg.col_tile,
+            n_col_tiles=self._bucket[-1], n_row_blocks=self._bucket[0],
+            chunk=cfg.chunk_iters, interpret=self.interpret)
+        self._state = stepper(self._mat, self._diag, self._state,
+                              self._tol, self._maxiter_vec)
+        return self._harvest()
+
+    def _harvest(self) -> Dict[int, CGResult]:
+        if self._state is None:
+            return {}
+        done: Dict[int, CGResult] = {}
+        active = np.asarray(self._state.active)
+        its = np.asarray(self._state.it)
+        rrs = np.asarray(self._state.rr)
+        tols = np.asarray(self._tol)
+        for s, rid in enumerate(self._req_of_slot):
+            if rid is None or active[s]:
+                continue
+            n = int(self._n_of_slot[s])
+            res = CGResult(
+                x=self._state.x[s, :n], iterations=int(its[s]),
+                rr=float(rrs[s]), converged=bool(rrs[s] <= tols[s]),
+                residual_trace=None, scheme=self.scheme.name,
+                method="vsr_batched")
+            done[rid] = res
+            self.results[rid] = res
+            self._req_of_slot[s] = None
+        return done
+
+    def run_to_completion(self, max_ticks: int = 10_000) -> Dict[int, CGResult]:
+        """Tick until every admitted system finished; returns all results
+        harvested during the call.  Raises if ``max_ticks`` elapses with
+        lanes still live (truncation must be observable, not a silently
+        missing request id)."""
+        out: Dict[int, CGResult] = {}
+        out.update(self._harvest())
+        ticks = 0
+        while self._state is not None and bool(self._state.active.any()):
+            if ticks >= max_ticks:
+                live = [rid for s, rid in enumerate(self._req_of_slot)
+                        if rid is not None and bool(self._state.active[s])]
+                raise RuntimeError(
+                    f"run_to_completion hit max_ticks={max_ticks} with "
+                    f"requests {live} still active (chunk_iters="
+                    f"{self.cfg.chunk_iters}); raise max_ticks or maxiter")
+            out.update(self.step())
+            ticks += 1
+        return out

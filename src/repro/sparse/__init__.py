@@ -8,6 +8,8 @@ Formats:
   * :mod:`repro.sparse.generators` — synthetic SPD problem generators that
     cover the regimes of the paper's Table 3 benchmark suite.
   * :mod:`repro.sparse.partition` — row-block partitioning for multi-chip CG.
+  * :mod:`repro.sparse.stacking` — bucketed padding/stacking for the batched
+    multi-system solver (:mod:`repro.core.batch`).
 """
 from repro.sparse.csr import CSRMatrix, csr_from_coo, csr_to_dense, csr_spmv
 from repro.sparse.bell import BellMatrix, csr_to_bell, bell_spmv_reference
@@ -21,6 +23,9 @@ from repro.sparse.generators import (
 )
 from repro.sparse.mtx import read_mtx, write_mtx
 from repro.sparse.partition import partition_rows, PartitionedMatrix
+from repro.sparse.stacking import (bucket_up, pad_bell, pad_ellpack,
+                                   stack_bell, stack_ellpack, StackedBell,
+                                   StackedEllpack)
 
 __all__ = [
     "CSRMatrix", "csr_from_coo", "csr_to_dense", "csr_spmv",
@@ -29,4 +34,6 @@ __all__ = [
     "tridiagonal_spd", "benchmark_suite",
     "read_mtx", "write_mtx",
     "partition_rows", "PartitionedMatrix",
+    "bucket_up", "pad_bell", "pad_ellpack", "stack_bell", "stack_ellpack",
+    "StackedBell", "StackedEllpack",
 ]

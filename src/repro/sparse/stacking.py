@@ -1,0 +1,276 @@
+"""Batched padding / stacking of sparse layouts (the multi-system path).
+
+The batched JPCG engine (:mod:`repro.core.batch`) solves B independent
+systems inside ONE compiled ``lax.while_loop``.  That requires every
+lane's matrix to share one padded shape, so the per-lane layouts are
+
+1. **bucketed** — each structural dimension (row blocks, slabs, slab
+   length, col tiles) is rounded up to a bucket edge (next power of two
+   by default) so heterogeneous traffic collapses onto a handful of
+   compiled executables (the paper's "arbitrary problem without
+   re-synthesis" goal, batched); and
+2. **zero-padded + stacked** along a new leading batch axis.
+
+Padding entries carry ``val = 0`` and local indices ``0``: they
+contribute ``0 * x[tile_base]`` to row ``block_base`` — harmless for the
+flat-slab :class:`~repro.sparse.bell.BellMatrix` (scatter-add of zeros)
+and for the slot-major :class:`~repro.sparse.ellpack.EllpackMatrix`
+(vectorized add of zeros) alike.  Padded *rows* are handled by the
+caller giving them a unit diagonal and zero rhs, so their residual is
+identically zero and they never influence termination.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence, Tuple
+
+import numpy as np
+
+from repro.sparse.bell import BellMatrix
+from repro.sparse.ellpack import EllpackMatrix
+
+__all__ = ["bucket_up", "pad_bell", "stack_bell", "pad_ellpack",
+           "stack_ellpack", "flatten_bell", "stack_flat", "StackedBell",
+           "StackedEllpack", "StackedFlat"]
+
+
+def bucket_up(x: int, *, minimum: int = 1) -> int:
+    """Round ``x`` up to the next bucket edge (powers of two).
+
+    Bucket edges bound the number of distinct compiled shapes by
+    ``O(log max_size)`` per dimension — the compile-cache policy of the
+    batched solver.
+    """
+    x = max(int(x), minimum)
+    return 1 << (x - 1).bit_length()
+
+
+def _pad_axis(a: np.ndarray, axis: int, size: int) -> np.ndarray:
+    if a.shape[axis] == size:
+        return a
+    if a.shape[axis] > size:
+        raise ValueError(f"cannot shrink axis {axis}: {a.shape[axis]} > {size}")
+    widths = [(0, 0)] * a.ndim
+    widths[axis] = (0, size - a.shape[axis])
+    return np.pad(a, widths)
+
+
+def pad_bell(m: BellMatrix, *, n_row_blocks: int, n_slabs: int,
+             slab_len: int) -> BellMatrix:
+    """Zero-pad a flat-slab banked-ELL matrix to the given structural dims."""
+    def pad3(a):
+        a = _pad_axis(a, 0, n_row_blocks)
+        a = _pad_axis(a, 1, n_slabs)
+        return _pad_axis(a, 2, slab_len)
+
+    return dataclasses.replace(
+        m,
+        tile_cols=_pad_axis(_pad_axis(m.tile_cols, 0, n_row_blocks), 1, n_slabs),
+        vals=pad3(m.vals),
+        local_rows=pad3(m.local_rows),
+        local_cols=pad3(m.local_cols))
+
+
+def pad_ellpack(m: EllpackMatrix, *, n_row_blocks: int, n_slabs: int,
+                ell: int) -> EllpackMatrix:
+    """Zero-pad a slot-major ELLPACK matrix to the given structural dims."""
+    def pad4(a):
+        a = _pad_axis(a, 0, n_row_blocks)
+        a = _pad_axis(a, 1, n_slabs)
+        return _pad_axis(a, 2, ell)
+
+    return dataclasses.replace(
+        m,
+        tile_cols=_pad_axis(_pad_axis(m.tile_cols, 0, n_row_blocks), 1, n_slabs),
+        vals=pad4(m.vals),
+        local_cols=pad4(m.local_cols))
+
+
+@dataclasses.dataclass(frozen=True)
+class StackedBell:
+    """B flat-slab banked-ELL matrices padded to one shape, stacked on axis 0."""
+
+    tile_cols: np.ndarray   # int32[G, B, T]
+    vals: np.ndarray        # v[G, B, T, L]
+    local_rows: np.ndarray  # int32[G, B, T, L]
+    local_cols: np.ndarray  # int32[G, B, T, L]
+    shapes: Tuple[Tuple[int, int], ...]   # logical per-lane shapes
+    nnzs: Tuple[int, ...]
+    block_rows: int
+    col_tile: int
+    n_col_tiles: int        # shared padded x-tile count
+
+    @property
+    def batch(self) -> int:
+        return int(self.vals.shape[0])
+
+    @property
+    def padded_rows(self) -> int:
+        return int(self.vals.shape[1]) * self.block_rows
+
+    @property
+    def padded_cols(self) -> int:
+        return self.n_col_tiles * self.col_tile
+
+
+@dataclasses.dataclass(frozen=True)
+class StackedEllpack:
+    """B slot-major ELLPACK matrices padded to one shape, stacked on axis 0."""
+
+    tile_cols: np.ndarray   # int32[G, B, T]
+    vals: np.ndarray        # v[G, B, T, E, R]
+    local_cols: np.ndarray  # int32[G, B, T, E, R]
+    shapes: Tuple[Tuple[int, int], ...]
+    nnzs: Tuple[int, ...]
+    block_rows: int
+    col_tile: int
+    n_col_tiles: int
+
+    @property
+    def batch(self) -> int:
+        return int(self.vals.shape[0])
+
+    @property
+    def padded_rows(self) -> int:
+        return int(self.vals.shape[1]) * self.block_rows
+
+    @property
+    def padded_cols(self) -> int:
+        return self.n_col_tiles * self.col_tile
+
+
+def stack_bell(mats: Sequence[BellMatrix], *, bucket: bool = True) -> StackedBell:
+    """Pad a heterogeneous list of BellMatrix to one (bucketed) shape and stack.
+
+    All inputs must share ``block_rows``/``col_tile`` (they parameterize
+    the kernel, not the problem).  With ``bucket=True`` every structural
+    dim is rounded up to a power-of-two edge so different batches of
+    similar problems reuse the same compiled solver.
+    """
+    if not mats:
+        raise ValueError("stack_bell needs at least one matrix")
+    r, c = mats[0].block_rows, mats[0].col_tile
+    for m in mats:
+        if (m.block_rows, m.col_tile) != (r, c):
+            raise ValueError("all matrices must share block_rows/col_tile")
+    rnd = bucket_up if bucket else (lambda x, minimum=1: max(int(x), minimum))
+    B = rnd(max(m.n_row_blocks for m in mats))
+    T = rnd(max(m.n_slabs for m in mats))
+    L = rnd(max(m.slab_len for m in mats))
+    n_tiles = rnd(max(m.n_col_tiles for m in mats))
+    padded = [pad_bell(m, n_row_blocks=B, n_slabs=T, slab_len=L) for m in mats]
+    return StackedBell(
+        tile_cols=np.stack([m.tile_cols for m in padded]),
+        vals=np.stack([m.vals for m in padded]),
+        local_rows=np.stack([m.local_rows for m in padded]),
+        local_cols=np.stack([m.local_cols for m in padded]),
+        shapes=tuple(m.shape for m in mats),
+        nnzs=tuple(m.nnz for m in mats),
+        block_rows=r, col_tile=c, n_col_tiles=n_tiles)
+
+
+def stack_ellpack(mats: Sequence[EllpackMatrix], *,
+                  bucket: bool = True) -> StackedEllpack:
+    """Pad a heterogeneous list of EllpackMatrix to one shape and stack.
+
+    The slot-major twin of :func:`stack_bell` — feeds the batched Pallas
+    SpMV grid (:func:`repro.kernels.spmv.spmv_pallas_batched`).
+    """
+    if not mats:
+        raise ValueError("stack_ellpack needs at least one matrix")
+    r, c = mats[0].block_rows, mats[0].col_tile
+    for m in mats:
+        if (m.block_rows, m.col_tile) != (r, c):
+            raise ValueError("all matrices must share block_rows/col_tile")
+    rnd = bucket_up if bucket else (lambda x, minimum=1: max(int(x), minimum))
+    B = rnd(max(m.n_row_blocks for m in mats))
+    T = rnd(max(m.n_slabs for m in mats))
+    E = rnd(max(m.ell for m in mats))
+    n_tiles = rnd(max(m.n_col_tiles for m in mats))
+    padded = [pad_ellpack(m, n_row_blocks=B, n_slabs=T, ell=E) for m in mats]
+    return StackedEllpack(
+        tile_cols=np.stack([m.tile_cols for m in padded]),
+        vals=np.stack([m.vals for m in padded]),
+        local_cols=np.stack([m.local_cols for m in padded]),
+        shapes=tuple(m.shape for m in mats),
+        nnzs=tuple(m.nnz for m in mats),
+        block_rows=r, col_tile=c, n_col_tiles=n_tiles)
+
+
+def flatten_bell(m: BellMatrix):
+    """Flatten a banked-ELL matrix to its packed nonzero stream.
+
+    Returns ``(global_cols, vals, rows)`` int32/value/int32 1-D arrays —
+    the closest host-side analogue of the Serpens/Callipepla per-channel
+    packed (col, row, val) stream.  Padding entries carry
+    ``(0, 0.0, 0)``: they add ``0 · x[0]`` to row 0, so a flat stream
+    can be zero-extended to ANY length without changing the product —
+    which is why the batched XLA solver buckets only this one dimension.
+    """
+    C, R = m.col_tile, m.block_rows
+    gcols = (m.tile_cols[:, :, None] * C + m.local_cols).reshape(-1)
+    blk = np.arange(m.n_row_blocks, dtype=np.int64)[:, None, None]
+    rows = (blk * R + m.local_rows).reshape(-1)
+    return (gcols.astype(np.int32), m.vals.reshape(-1).copy(),
+            rows.astype(np.int32))
+
+
+@dataclasses.dataclass(frozen=True)
+class StackedFlat:
+    """B packed nonzero streams padded to one length, stacked on axis 0.
+
+    The batched XLA solver's matrix operand: bucketing the *stream
+    length* (one dimension) instead of (row blocks × slabs × slab len)
+    independently keeps padding waste ≤ 2× per lane where the 3-D
+    bucket compounds to ~8×.
+    """
+
+    gcols: np.ndarray       # int32[G, N] global column per nonzero
+    vals: np.ndarray        # v[G, N]
+    rows: np.ndarray        # int32[G, N] global (padded) row per nonzero
+    shapes: Tuple[Tuple[int, int], ...]
+    nnzs: Tuple[int, ...]
+    block_rows: int
+    col_tile: int
+    n_row_blocks: int       # shared (bucketed) row-block count
+    n_col_tiles: int
+
+    @property
+    def batch(self) -> int:
+        return int(self.vals.shape[0])
+
+    @property
+    def padded_rows(self) -> int:
+        return self.n_row_blocks * self.block_rows
+
+    @property
+    def padded_cols(self) -> int:
+        return self.n_col_tiles * self.col_tile
+
+
+def stack_flat(mats: Sequence[BellMatrix], *, bucket: bool = True) -> StackedFlat:
+    """Flatten + pad + stack banked-ELL matrices as packed nonzero streams."""
+    if not mats:
+        raise ValueError("stack_flat needs at least one matrix")
+    r, c = mats[0].block_rows, mats[0].col_tile
+    for m in mats:
+        if (m.block_rows, m.col_tile) != (r, c):
+            raise ValueError("all matrices must share block_rows/col_tile")
+    rnd = bucket_up if bucket else (lambda x, minimum=1: max(int(x), minimum))
+    flats = [flatten_bell(m) for m in mats]
+    N = rnd(max(f[0].shape[0] for f in flats))
+    B = rnd(max(m.n_row_blocks for m in mats))
+    n_tiles = rnd(max(m.n_col_tiles for m in mats))
+    G = len(mats)
+    gcols = np.zeros((G, N), np.int32)
+    vals = np.zeros((G, N), mats[0].vals.dtype)
+    rows = np.zeros((G, N), np.int32)
+    for g, (gc, v, rw) in enumerate(flats):
+        gcols[g, : gc.shape[0]] = gc
+        vals[g, : v.shape[0]] = v
+        rows[g, : rw.shape[0]] = rw
+    return StackedFlat(gcols, vals, rows,
+                       shapes=tuple(m.shape for m in mats),
+                       nnzs=tuple(m.nnz for m in mats),
+                       block_rows=r, col_tile=c, n_row_blocks=B,
+                       n_col_tiles=n_tiles)

@@ -1,0 +1,128 @@
+"""Hypothesis shim — property tests with or without ``hypothesis``.
+
+The property-test modules import ``given``/``settings``/``strategies``
+from here instead of from ``hypothesis`` directly.  When the real
+package is installed we re-export it untouched (full shrinking, the
+works).  When it is absent (minimal CI images, the baked container),
+we fall back to *fixed example sampling*: each ``@given`` test runs
+``max_examples`` times against examples drawn from a deterministic
+per-test RNG (seeded from the test's qualified name), so runs are
+reproducible and a failure names the exact drawn values.
+
+Supported strategy surface (what the suite uses):
+``st.integers(lo, hi)``, ``st.floats(lo, hi)``, ``st.sampled_from(seq)``,
+``st.booleans()``.  ``settings(...)`` honors ``max_examples`` and ignores
+``deadline``/``derandomize`` (meaningless without the real engine).
+"""
+from __future__ import annotations
+
+__all__ = ["given", "settings", "strategies", "HAVE_HYPOTHESIS"]
+
+try:
+    from hypothesis import given, settings, strategies  # noqa: F401
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    HAVE_HYPOTHESIS = False
+
+    import zlib
+
+    import numpy as np
+
+    _DEFAULT_MAX_EXAMPLES = 10
+
+    class _Strategy:
+        def example(self, rng: np.random.Generator):
+            raise NotImplementedError
+
+    class _Integers(_Strategy):
+        def __init__(self, min_value, max_value):
+            self.lo, self.hi = int(min_value), int(max_value)
+
+        def example(self, rng):
+            return int(rng.integers(self.lo, self.hi + 1))
+
+    class _Floats(_Strategy):
+        def __init__(self, min_value, max_value):
+            self.lo, self.hi = float(min_value), float(max_value)
+
+        def example(self, rng):
+            return float(self.lo + (self.hi - self.lo) * rng.random())
+
+    class _SampledFrom(_Strategy):
+        def __init__(self, seq):
+            self.seq = list(seq)
+
+        def example(self, rng):
+            return self.seq[int(rng.integers(0, len(self.seq)))]
+
+    class _Booleans(_Strategy):
+        def example(self, rng):
+            return bool(rng.integers(0, 2))
+
+    class _StrategiesModule:
+        """Duck-typed stand-in for ``hypothesis.strategies``."""
+
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Integers(min_value, max_value)
+
+        @staticmethod
+        def floats(min_value, max_value, **_kw):
+            return _Floats(min_value, max_value)
+
+        @staticmethod
+        def sampled_from(seq):
+            return _SampledFrom(seq)
+
+        @staticmethod
+        def booleans():
+            return _Booleans()
+
+    strategies = _StrategiesModule()
+
+    def settings(**kw):
+        """Record settings on the test function (or on a @given wrapper)."""
+
+        def deco(fn):
+            fn._hyp_settings = kw
+            return fn
+
+        return deco
+
+    def given(**strats):
+        """Run the test over deterministic examples of each strategy.
+
+        The wrapper deliberately does NOT expose ``__wrapped__``: pytest
+        introspects it for fixture names, and the strategy parameters
+        must stay invisible to the fixture machinery (the real
+        hypothesis pulls the same trick).
+        """
+        for k, v in strats.items():
+            if not isinstance(v, _Strategy):
+                raise TypeError(f"unsupported strategy for {k!r}: {v!r}")
+
+        def deco(fn):
+            def wrapper(*args, **kwargs):
+                n = {**getattr(fn, "_hyp_settings", {}),
+                     **getattr(wrapper, "_hyp_settings", {})}.get(
+                    "max_examples", _DEFAULT_MAX_EXAMPLES)
+                seed = zlib.crc32(
+                    f"{fn.__module__}.{fn.__qualname__}".encode())
+                rng = np.random.default_rng(seed)
+                for i in range(n):
+                    drawn = {k: s.example(rng) for k, s in strats.items()}
+                    try:
+                        fn(*args, **kwargs, **drawn)
+                    except Exception as e:
+                        raise AssertionError(
+                            f"falsifying example #{i} (seed={seed}): "
+                            f"{drawn!r}") from e
+
+            wrapper.__name__ = fn.__name__
+            wrapper.__qualname__ = fn.__qualname__
+            wrapper.__doc__ = fn.__doc__
+            wrapper.__module__ = fn.__module__
+            wrapper._hyp_settings = getattr(fn, "_hyp_settings", {})
+            return wrapper
+
+        return deco

@@ -1,0 +1,173 @@
+"""Batched multi-system JPCG: lane-vs-single parity, on-the-fly per-lane
+termination, bucket compile-cache reuse, SolverEngine admission."""
+import jax
+import numpy as np
+import pytest
+
+from repro.core.batch import (batch_cache_clear, batch_cache_info,
+                              jpcg_solve_batched)
+from repro.core.cg import jpcg_solve
+from repro.sparse import (csr_to_dense, diag_dominant_spd, poisson_2d,
+                          random_spd, tridiagonal_spd)
+from repro.sparse.stacking import bucket_up
+from repro.serve.solver_engine import SolverEngine, SolverEngineConfig
+
+BK = dict(block_rows=8, col_tile=128)
+
+
+def _mixed_bag():
+    """≥8 heterogeneous SPD systems: different n, conditioning, sparsity."""
+    return [
+        poisson_2d(16),                                                 # 256
+        tridiagonal_spd(300),                                           # 300
+        diag_dominant_spd(200, nnz_per_row=8, dominance=1.3, seed=2),
+        random_spd(64, cond=100.0, seed=1),
+        poisson_2d(20),                                                 # 400
+        tridiagonal_spd(128, off=-0.4),          # easy: converges early
+        diag_dominant_spd(400, nnz_per_row=12, dominance=1.05, seed=5),
+        random_spd(100, cond=1e3, seed=9),
+    ]
+
+
+class TestBatchedParity:
+    def test_lanes_match_single_solver(self):
+        """Each lane of one compiled batched solve reproduces the
+        single-system solver: iterations within ±1, x to tolerance."""
+        probs = _mixed_bag()
+        assert len(probs) >= 8
+        res = jpcg_solve_batched(probs, tol=1e-12, maxiter=4000, **BK)
+        for a, r in zip(probs, res):
+            ref = jpcg_solve(a, tol=1e-12, maxiter=4000, **BK)
+            assert r.converged and ref.converged
+            assert abs(r.iterations - ref.iterations) <= 1
+            # both stopped at ‖r‖² ≤ 1e-12, i.e. ‖r‖ ≈ 1e-6: the two
+            # near-solutions may differ by one final update of that size
+            np.testing.assert_allclose(np.asarray(r.x), np.asarray(ref.x),
+                                       rtol=1e-4, atol=1e-6)
+
+    @pytest.mark.slow
+    def test_solution_solves_system(self):
+        probs = _mixed_bag()
+        res = jpcg_solve_batched(probs, tol=1e-12, maxiter=4000, **BK)
+        for a, r in zip(probs, res):
+            d = csr_to_dense(a)
+            x = np.asarray(r.x)
+            b = np.ones(a.shape[0])
+            assert np.linalg.norm(d @ x - b) <= 1e-4 * np.linalg.norm(b)
+
+    @pytest.mark.parametrize("scheme", ["fp64", "mixed_v3"])
+    def test_schemes(self, scheme):
+        probs = [poisson_2d(12), tridiagonal_spd(200)]
+        res = jpcg_solve_batched(probs, tol=1e-12, maxiter=2000,
+                                 scheme=scheme, **BK)
+        for a, r in zip(probs, res):
+            ref = jpcg_solve(a, tol=1e-12, maxiter=2000, scheme=scheme, **BK)
+            assert abs(r.iterations - ref.iterations) <= 1
+
+    def test_custom_rhs_x0_and_per_problem_tol(self):
+        probs = [poisson_2d(12), poisson_2d(14)]
+        rng = np.random.default_rng(0)
+        bs = [rng.standard_normal(a.shape[0]) for a in probs]
+        d0 = csr_to_dense(probs[0])
+        xstar0 = np.linalg.solve(d0, bs[0])
+        x0s = [xstar0, np.zeros(probs[1].shape[0])]
+        res = jpcg_solve_batched(probs, bs, x0s=x0s,
+                                 tol=[1e-10, 1e-12], maxiter=2000, **BK)
+        # lane 0 started at its solution: terminates immediately
+        assert res[0].iterations <= 1
+        assert res[1].converged and res[1].rr <= 1e-12
+
+
+class TestOnTheFlyTermination:
+    def test_early_lane_freezes(self):
+        """An easy lane converges early and its x stops updating while the
+        hard lane keeps iterating (per-problem termination in one loop)."""
+        easy = tridiagonal_spd(256, off=-0.1)
+        hard = tridiagonal_spd(256)
+        res = jpcg_solve_batched([easy, hard], tol=1e-12, maxiter=1000,
+                                 with_trace=True, **BK)
+        assert res[0].iterations < res[1].iterations
+        # frozen lane's result equals its own single solve (no extra drift
+        # from the iterations the batch kept running)
+        ref = jpcg_solve(easy, tol=1e-12, maxiter=1000, **BK)
+        assert abs(res[0].iterations - ref.iterations) <= 1
+        np.testing.assert_allclose(np.asarray(res[0].x), np.asarray(ref.x),
+                                   rtol=1e-9)
+        # trace stops exactly at the lane's own iteration count
+        assert res[0].residual_trace.shape[0] == res[0].iterations
+        assert res[0].residual_trace[-1] <= 1e-12
+
+    def test_maxiter_respected_per_batch(self):
+        a = diag_dominant_spd(500, nnz_per_row=12, dominance=1.01, seed=1)
+        res = jpcg_solve_batched([a, poisson_2d(8)], tol=1e-30, maxiter=7,
+                                 **BK)
+        assert res[0].iterations == 7 and not res[0].converged
+        assert res[1].iterations == 7 and not res[1].converged
+
+
+class TestBucketCache:
+    def test_same_bucket_reuses_runner(self):
+        """Two different heterogeneous batches landing in the same bucket
+        share one compiled runner (the handful-of-executables goal)."""
+        batch_cache_clear()
+        jpcg_solve_batched([poisson_2d(12), tridiagonal_spd(200)],
+                           tol=1e-12, maxiter=500, **BK)
+        info1 = batch_cache_info()
+        jpcg_solve_batched([poisson_2d(11), tridiagonal_spd(180)],
+                           tol=1e-12, maxiter=500, **BK)
+        info2 = batch_cache_info()
+        assert info1["entries"] == 1 and info1["misses"] == 1
+        assert info2["entries"] == 1 and info2["hits"] == info1["hits"] + 1
+
+    def test_bucket_up_edges(self):
+        assert [bucket_up(x) for x in (1, 2, 3, 5, 8, 9)] == \
+            [1, 2, 4, 8, 8, 16]
+
+
+class TestSolverEngine:
+    def test_admission_and_harvest(self):
+        eng = SolverEngine(SolverEngineConfig(batch_slots=4, chunk_iters=32,
+                                              **BK))
+        probs = {0: poisson_2d(16), 1: tridiagonal_spd(300),
+                 2: diag_dominant_spd(200, nnz_per_row=8, dominance=1.3,
+                                      seed=2)}
+        ids = {k: eng.submit(a) for k, a in probs.items()}
+        eng.step()
+        # a slot freed mid-flight admits a new system without disturbing
+        # the in-flight lanes — DecodeEngine-style continuous batching
+        ids[3] = eng.submit(poisson_2d(20))
+        probs[3] = poisson_2d(20)
+        eng.run_to_completion()
+        for k, a in probs.items():
+            ref = jpcg_solve(a, tol=1e-12, maxiter=20_000, **BK)
+            got = eng.results[ids[k]]
+            assert got.converged
+            assert abs(got.iterations - ref.iterations) <= 1
+            np.testing.assert_allclose(np.asarray(got.x), np.asarray(ref.x),
+                                       rtol=1e-6, atol=1e-8)
+
+    def test_bucket_growth(self):
+        eng = SolverEngine(SolverEngineConfig(batch_slots=2, chunk_iters=64,
+                                              **BK))
+        r1 = eng.submit(poisson_2d(12))
+        eng.run_to_completion()
+        r2 = eng.submit(poisson_2d(40))     # larger problem: bucket grows
+        eng.run_to_completion()
+        ref = jpcg_solve(poisson_2d(40), tol=1e-12, maxiter=20_000, **BK)
+        assert abs(eng.results[r2].iterations - ref.iterations) <= 1
+        assert eng.results[r1].converged and eng.results[r2].converged
+
+    def test_slot_exhaustion_raises(self):
+        eng = SolverEngine(SolverEngineConfig(batch_slots=1, **BK))
+        eng.submit(poisson_2d(8))
+        with pytest.raises(RuntimeError):
+            eng.submit(poisson_2d(8))
+
+    def test_per_request_maxiter(self):
+        eng = SolverEngine(SolverEngineConfig(batch_slots=2, chunk_iters=8,
+                                              **BK))
+        hard = diag_dominant_spd(500, nnz_per_row=12, dominance=1.01, seed=1)
+        rid = eng.submit(hard, tol=1e-30, maxiter=5)
+        eng.run_to_completion()
+        assert eng.results[rid].iterations == 5
+        assert not eng.results[rid].converged

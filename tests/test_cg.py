@@ -1,7 +1,7 @@
 """Solver property tests (hypothesis) + method equivalences."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, strategies as st
 
 from repro.core.cg import jpcg_solve
 from repro.sparse import (csr_to_dense, diag_dominant_spd, poisson_2d,
@@ -131,6 +131,7 @@ class TestBackends:
             rtol=1e-6, atol=1e-7)
 
 
+@pytest.mark.slow
 def test_residual_replacement_stabilizes_pipelined():
     """Pipelined CG with periodic residual replacement reaches the same
     tolerance as true-residual CG on an ill-conditioned system."""

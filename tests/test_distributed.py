@@ -78,6 +78,7 @@ class TestShardingRules:
         assert specs["embed"]["e"] is not None
 
 
+@pytest.mark.slow                 # subprocess + 8 host devices
 class TestDistributedCG:
     @pytest.mark.parametrize("method", ["vsr", "pipelined"])
     def test_solves_poisson_8dev(self, method):
@@ -164,6 +165,7 @@ class TestDistributedCG:
         assert out["pipe"] < out["vsr"]
 
 
+@pytest.mark.slow                 # subprocess + 8 host devices
 class TestHaloExchange:
     def test_halo_equals_allgather(self):
         """Stencil fast path: neighbor-permute halo SpMV solves
@@ -210,6 +212,7 @@ class TestHaloExchange:
         assert out["supports"] and out["halo"] == 64
 
 
+@pytest.mark.slow                 # subprocess + 8 host devices
 class TestElasticRemesh:
     def test_save_mesh_a_restore_mesh_b(self, tmp_path):
         out = _run(f"""
@@ -243,6 +246,7 @@ class TestElasticRemesh:
         assert "2" in out["resharded"] and "4" in out["resharded"]
 
 
+@pytest.mark.slow                 # subprocess + 8 host devices
 class TestMeshTrainStep:
     def test_sharded_train_step_runs(self):
         """make_train_step(mesh=...) produces a runnable sharded step."""

@@ -35,6 +35,21 @@ def test_derived_memory_instructions_match_vsr(policy, reads, writes):
                  "total": reads + writes}
 
 
+def test_derived_mem_instructions_regression_lock():
+    """Regression lock (§4.1.3): the paper program's derived Type-III
+    InstRdWr stream is EXACTLY 10 reads + 4 writes — the ISA-level twin
+    of the §5.5 VSR accounting lock in test_vsr.py.  A drift here means
+    assemble_jpcg emits a different memory schedule."""
+    enc, _ = assemble_jpcg("paper")
+    m = derived_mem_instructions(enc)
+    assert m == {"reads": 10, "writes": 4, "total": 14}
+    enc2, _ = assemble_jpcg("min_traffic")
+    m2 = derived_mem_instructions(enc2)
+    assert m2 == {"reads": 9, "writes": 4, "total": 13}
+    # min_traffic saves exactly one read vs the paper schedule
+    assert m["reads"] - m2["reads"] == 1 and m["writes"] == m2["writes"]
+
+
 @pytest.mark.parametrize("policy", ["paper", "min_traffic"])
 def test_vm_matches_production_solver(policy):
     """Executing the ISA program reproduces the phase-fused solver

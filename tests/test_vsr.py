@@ -12,6 +12,27 @@ def test_access_counts_match_paper():
     assert c["min_traffic"] == {"reads": 9, "writes": 4, "total": 13}
 
 
+def test_access_counts_regression_lock():
+    """Regression lock on the §5.5 accounting, stated as bare integers so
+    a schedule refactor cannot silently drift them: naive = 14R + 5W = 19,
+    paper VSR = 10R + 4W = 14, min-traffic = 9R + 4W = 13.  If one of
+    these asserts fires, the *schedule* changed — fix the schedule or
+    update the paper-comparison docs, never this test."""
+    c = access_counts()
+    assert (c["naive"]["reads"], c["naive"]["writes"]) == (14, 5)
+    assert (c["paper"]["reads"], c["paper"]["writes"]) == (10, 4)
+    assert (c["min_traffic"]["reads"], c["min_traffic"]["writes"]) == (9, 4)
+    s_paper = schedule(policy="paper")
+    assert (s_paper.n_reads, s_paper.n_writes, s_paper.n_accesses) \
+        == (10, 4, 14)
+    s_min = schedule(policy="min_traffic")
+    assert (s_min.n_reads, s_min.n_writes, s_min.n_accesses) == (9, 4, 13)
+    # the min-traffic win over the paper is exactly ONE read (the M4
+    # re-run's re-read of r), nothing else
+    assert s_paper.n_reads - s_min.n_reads == 1
+    assert s_paper.n_writes == s_min.n_writes
+
+
 def test_three_phases():
     """Fig. 5: scalar deps split the loop into exactly three phases."""
     s = schedule(policy="paper")
