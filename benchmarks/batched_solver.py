@@ -1,21 +1,25 @@
-"""Batched multi-system solver throughput — systems/sec vs a Python loop.
+"""Batched multi-system solver throughput + stream-VM dispatch overhead.
 
-The serving claim of the batched engine, measured: solve the same bag of
-heterogeneous SPD systems (a) one-by-one through ``jpcg_solve`` — one
-compiled loop per padded bucket, dispatched serially from Python — and
-(b) in one ``jpcg_solve_batched`` call — all systems in ONE compiled
-``lax.while_loop`` with per-lane on-the-fly termination.
+Three ways to solve the same bag of heterogeneous SPD systems:
+
+* ``python_loop`` — one-by-one through ``jpcg_solve`` (one compiled loop
+  per padded bucket, dispatched serially from Python);
+* ``batched_phases`` — all systems in ONE compiled ``lax.while_loop``
+  through the phase-fused engine (``engine="phases"``, the oracle);
+* ``batched_vm`` — the same batch through the stream VM executing the
+  compiled paper-policy program (``engine="vm"``, the production path).
 
 Reading the numbers: on a *serial CPU host* the loop generally wins —
-every padded FLOP executes sequentially, each single solve is already
-one compiled ``while_loop`` (no per-iteration dispatch to amortize), and
-the batch runs until its slowest lane converges.  The CPU ratio is the
-batched path's *overhead factor* (padding + convergence sync), which
-this benchmark exists to track; the throughput win appears on SIMD
-hardware (TPU) where the extra lanes occupy otherwise-idle vector lanes
-and one executable serves the whole traffic stream.
+every padded FLOP executes sequentially and the batch runs until its
+slowest lane converges; the CPU batched/loop ratio is the padding +
+convergence-sync overhead this benchmark tracks, and the throughput win
+appears on SIMD hardware (TPU) where extra lanes occupy otherwise-idle
+vector lanes.  ``vm_overhead`` (t_vm / t_phases) is the new number this
+section collects: the cost of instruction-at-a-time ``lax.switch``
+dispatch relative to the phase-fused loop for the *same arithmetic* —
+the VM's results are bit-identical, so any gap is pure dispatch.
 
-``python -m benchmarks.batched_solver [--repeat-suite N]``
+``python -m benchmarks.batched_solver [--repeat-suite N] [--smoke]``
 """
 from __future__ import annotations
 
@@ -30,12 +34,16 @@ from repro.core.cg import jpcg_solve
 from repro.sparse import diag_dominant_spd, poisson_2d, tridiagonal_spd
 
 HEADER = ["mode", "systems", "total_iters", "time_s", "systems_per_s",
-          "speedup"]
+          "speedup", "vm_overhead"]
 
 BK = dict(block_rows=8, col_tile=128)
 
 
-def _bag(copies: int = 1):
+def _bag(copies: int = 1, smoke: bool = False):
+    if smoke:
+        return [poisson_2d(16), tridiagonal_spd(300),
+                diag_dominant_spd(300, nnz_per_row=8, dominance=1.2,
+                                  seed=1)]
     base = [
         poisson_2d(24),
         poisson_2d(30),
@@ -49,39 +57,50 @@ def _bag(copies: int = 1):
     return base * copies
 
 
-def run(repeat_suite: int = 1):
-    jax.config.update("jax_enable_x64", True)
-    probs = _bag(repeat_suite)
-    kw = dict(tol=1e-12, maxiter=4000)
+def _timed(fn, *args, **kw):
+    t0 = time.perf_counter()
+    out = fn(*args, **kw)
+    sync = out[-1].x if isinstance(out, list) else out.x
+    jax.block_until_ready(sync)
+    return out, time.perf_counter() - t0
 
-    # warm-up both paths (compile), then time
+
+def run(repeat_suite: int = 1, smoke: bool = False):
+    jax.config.update("jax_enable_x64", True)
+    probs = _bag(repeat_suite, smoke=smoke)
+    kw = dict(tol=1e-12, maxiter=1000 if smoke else 4000)
+
+    # warm-up all three paths (compile), then time
     for a in probs:
         jpcg_solve(a, **kw, **BK)
-    jpcg_solve_batched(probs, **kw, **BK)
+    jpcg_solve_batched(probs, **kw, engine="phases", **BK)
+    jpcg_solve_batched(probs, **kw, engine="vm", **BK)
 
-    t0 = time.perf_counter()
-    singles = [jpcg_solve(a, **kw, **BK) for a in probs]
-    jax.block_until_ready(singles[-1].x)
-    t_loop = time.perf_counter() - t0
+    singles, t_loop = _timed(
+        lambda: [jpcg_solve(a, **kw, **BK) for a in probs])
+    phases, t_phases = _timed(
+        jpcg_solve_batched, probs, **kw, engine="phases", **BK)
+    vm, t_vm = _timed(jpcg_solve_batched, probs, **kw, engine="vm", **BK)
 
-    t0 = time.perf_counter()
-    batched = jpcg_solve_batched(probs, **kw, **BK)
-    jax.block_until_ready(batched[-1].x)
-    t_batch = time.perf_counter() - t0
+    for s, p, v in zip(singles, phases, vm):
+        assert abs(s.iterations - p.iterations) <= 1, "parity violated"
+        assert v.iterations == p.iterations, "VM/phases parity violated"
+        assert np.array_equal(np.asarray(v.x), np.asarray(p.x)), \
+            "VM not bit-identical to phases engine"
 
-    for s, b in zip(singles, batched):
-        assert abs(s.iterations - b.iterations) <= 1, "parity violated"
+    def row(mode, res, t, vm_overhead=""):
+        return {"mode": mode, "systems": len(probs),
+                "total_iters": sum(r.iterations for r in res),
+                "time_s": round(t, 4),
+                "systems_per_s": round(len(probs) / t, 2),
+                "speedup": round(t_loop / t, 2),
+                "vm_overhead": vm_overhead}
 
     rows = [
-        {"mode": "python_loop", "systems": len(probs),
-         "total_iters": sum(r.iterations for r in singles),
-         "time_s": f"{t_loop:.4f}",
-         "systems_per_s": f"{len(probs) / t_loop:.2f}", "speedup": "1.00"},
-        {"mode": "batched", "systems": len(probs),
-         "total_iters": sum(r.iterations for r in batched),
-         "time_s": f"{t_batch:.4f}",
-         "systems_per_s": f"{len(probs) / t_batch:.2f}",
-         "speedup": f"{t_loop / t_batch:.2f}"},
+        row("python_loop", singles, t_loop),
+        row("batched_phases", phases, t_phases),
+        row("batched_vm", vm, t_vm,
+            vm_overhead=round(t_vm / t_phases, 2)),
     ]
     emit(rows, HEADER)
     print(f"# batch compile cache: {batch_cache_info()}")
@@ -92,4 +111,5 @@ if __name__ == "__main__":
     import argparse
     ap = argparse.ArgumentParser()
     ap.add_argument("--repeat-suite", type=int, default=1)
+    ap.add_argument("--smoke", action="store_true")
     run(**vars(ap.parse_args()))

@@ -1,6 +1,16 @@
 """Benchmark driver — one section per paper table/figure.
 
-``python -m benchmarks.run [--tier small|large|all]``
+``python -m benchmarks.run [--tier small|large|all] [--smoke]``
+
+Every section that returns rows is also persisted as machine-readable
+``BENCH_<name>.json`` at the repo root (see
+:func:`benchmarks.common.write_bench_json`), so the perf trajectory is
+collected across PRs — CI's smoke lane runs ``--smoke`` and uploads the
+JSON files as artifacts.
+
+``--smoke`` runs the fast, always-on subset (VSR accounting + the
+batched-solver throughput/VM-overhead section with a reduced bag): a
+quick signal that the numbers still materialize, not a rigorous timing.
 """
 from __future__ import annotations
 
@@ -12,6 +22,8 @@ def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--tier", default="small",
                     choices=["small", "large", "all"])
+    ap.add_argument("--smoke", action="store_true",
+                    help="fast subset for CI; still emits BENCH_*.json")
     args = ap.parse_args(argv)
 
     import jax
@@ -21,28 +33,42 @@ def main(argv=None):
                             roofline_table, spmv_kernel, tab4_solver_time,
                             tab5_throughput, tab7_iterations,
                             vsr_access_counts)
+    from benchmarks.common import write_bench_json
 
     sections = [
-        ("§5.5 VSR access accounting (naive 19 -> 14 -> 13)",
+        ("vsr_access_counts",
+         "§5.5 VSR access accounting (naive 19 -> 14 -> 13)",
          vsr_access_counts.run, {}),
-        ("Table 4: solver time", tab4_solver_time.run,
+        ("tab4_solver_time", "Table 4: solver time", tab4_solver_time.run,
          {"tier": args.tier}),
-        ("Table 5: throughput + fraction-of-peak", tab5_throughput.run,
-         {"tier": args.tier}),
-        ("Table 7: iteration counts vs FP64", tab7_iterations.run,
-         {"tier": args.tier}),
-        ("Fig. 9: residual traces", fig9_residual_traces.run, {}),
-        ("Kernel: SpMV stream bytes per scheme", spmv_kernel.run,
-         {"tier": args.tier}),
-        ("Roofline: dry-run table (single pod)", roofline_table.run, {}),
-        ("Batched solver: systems/sec vs Python loop",
-         batched_solver.run, {}),
+        ("tab5_throughput", "Table 5: throughput + fraction-of-peak",
+         tab5_throughput.run, {"tier": args.tier}),
+        ("tab7_iterations", "Table 7: iteration counts vs FP64",
+         tab7_iterations.run, {"tier": args.tier}),
+        ("fig9_residual_traces", "Fig. 9: residual traces",
+         fig9_residual_traces.run, {}),
+        ("spmv_kernel", "Kernel: SpMV stream bytes per scheme",
+         spmv_kernel.run, {"tier": args.tier}),
+        ("roofline_table", "Roofline: dry-run table (single pod)",
+         roofline_table.run, {}),
+        ("batched_solver",
+         "Batched solver: systems/sec + stream-VM overhead",
+         batched_solver.run, {"smoke": args.smoke}),
     ]
-    for title, fn, kw in sections:
+    if args.smoke:
+        keep = {"vsr_access_counts", "batched_solver"}
+        sections = [s for s in sections if s[0] in keep]
+
+    for name, title, fn, kw in sections:
         print(f"\n=== {title} ===")
         t0 = time.time()
-        fn(**kw)
-        print(f"--- ({time.time() - t0:.1f}s)")
+        rows = fn(**kw)
+        elapsed = time.time() - t0
+        if rows is not None:
+            write_bench_json(name, rows,
+                             meta={"tier": args.tier, "smoke": args.smoke,
+                                   "elapsed_s": round(elapsed, 2)})
+        print(f"--- ({elapsed:.1f}s)")
 
 
 if __name__ == "__main__":

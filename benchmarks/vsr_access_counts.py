@@ -7,7 +7,8 @@ HBM byte model for a reference large matrix.
 from __future__ import annotations
 
 from benchmarks.common import emit
-from repro.core.isa import assemble_jpcg, derived_mem_instructions
+from repro.core.compile import compile_policy
+from repro.core.isa import derived_mem_instructions
 from repro.core.precision import get_scheme
 from repro.core.vsr import access_counts, schedule
 
@@ -24,11 +25,10 @@ def run():
         c = counts[pol]
         isa_r = isa_w = ""
         if pol in ("paper", "min_traffic"):
-            prog, _ = assemble_jpcg(pol)
-            m = derived_mem_instructions(prog)
+            m = derived_mem_instructions(compile_policy(pol).program)
             isa_r, isa_w = m["reads"], m["writes"]
             assert (m["reads"], m["writes"]) == (c["reads"], c["writes"]), \
-                "ISA program disagrees with VSR analysis"
+                "compiled ISA program disagrees with VSR analysis"
         vec_bytes = c["total"] * n * v3.vector_bytes
         mat_bytes = nnz * v3.nonzero_stream_bytes()
         rows.append({

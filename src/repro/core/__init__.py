@@ -7,15 +7,19 @@ The paper's three contributions, as composable pieces:
 * :mod:`repro.core.phases` / :mod:`repro.core.cg` — the production solver;
 * :mod:`repro.core.batch` — batched multi-system JPCG (one compiled loop,
   per-problem on-the-fly termination);
-* :mod:`repro.core.isa` / :mod:`repro.core.vm` — the stream-centric
-  instruction set + VM (§3–4);
+* :mod:`repro.core.isa` / :mod:`repro.core.compile` / :mod:`repro.core.vm`
+  — the stream-centric instruction set (§4), the schedule→program
+  compiler, and the batched stream VM (§3–4) that is the default solver
+  backend (see ARCHITECTURE.md for the pipeline);
 * :mod:`repro.core.pipelined` — beyond-paper single-reduction CG;
 * :mod:`repro.core.gn` — matrix-free Gauss–Newton operators (CGGN bridge).
 """
 from repro.core.cg import CGResult, jpcg_solve
 from repro.core.batch import jpcg_solve_batched
+from repro.core.compile import compile_policy, compile_schedule
 from repro.core.precision import SCHEMES, PrecisionScheme, get_scheme
 from repro.core.vsr import access_counts, schedule
 
 __all__ = ["CGResult", "jpcg_solve", "jpcg_solve_batched", "SCHEMES", "PrecisionScheme",
-           "get_scheme", "access_counts", "schedule"]
+           "get_scheme", "access_counts", "schedule", "compile_policy",
+           "compile_schedule"]

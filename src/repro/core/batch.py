@@ -3,10 +3,21 @@
 The paper's Challenge 1 is "support an arbitrary problem and terminate
 acceleration processing on the fly"; the serving-scale version of that
 challenge is *many* arbitrary problems at once.  This module stacks B
-independent SPD systems along a leading batch axis and runs the
-three-phase VSR loop (:func:`repro.core.phases.vsr_iteration` — literally
-the same iteration code as the single-system solver) on all of them
-inside one ``lax.while_loop``:
+independent SPD systems along a leading batch axis and solves them inside
+one ``lax.while_loop`` through one of two engines:
+
+* ``engine="vm"`` (default) — the batched stream VM
+  (:mod:`repro.core.vm`) executing a compiled stream-ISA program
+  (:func:`repro.core.compile.compile_policy`); ``policy=`` picks the VSR
+  schedule ("paper" | "min_traffic") and ``program=`` injects any custom
+  program.  The VM executable is cached per (bucket shape, backend,
+  scheme) — **never** per program/policy — so swapping schedules never
+  recompiles (the paper's one-bitstream-serves-any-schedule goal).
+* ``engine="phases"`` — the phase-fused loop
+  (:func:`repro.core.phases.vsr_iteration`, literally the single-system
+  iteration code), kept as the bit-exact oracle the VM is tested against.
+
+Either engine runs the same masked per-lane loop:
 
 * every lane carries its own ``active`` flag; a lane terminates on the
   fly at its own ``‖r‖² ≤ τ_g`` while the batch keeps iterating — its
@@ -69,8 +80,7 @@ from repro.sparse.ellpack import csr_to_ellpack
 from repro.sparse.stacking import StackedEllpack, stack_ellpack, stack_flat
 
 __all__ = ["BatchedCGState", "jpcg_solve_batched", "batched_matvec_flat",
-           "batched_matvec_ellpack", "make_batched_stepper",
-           "batch_cache_info", "batch_cache_clear"]
+           "batched_matvec_ellpack", "batch_cache_info", "batch_cache_clear"]
 
 
 class BatchedCGState(NamedTuple):
@@ -257,41 +267,6 @@ def _make_runner(*, backend, scheme, maxiter, with_trace, block_rows,
     return run
 
 
-def make_batched_stepper(*, backend, scheme, block_rows, col_tile,
-                         n_col_tiles, n_row_blocks, chunk, interpret=False):
-    """Jitted bounded stepper for incremental serving (SolverEngine).
-
-    Runs at most ``chunk`` iterations of the masked batched loop from a
-    given state; per-lane iteration budgets come in as ``maxiter_vec``
-    (lanes admitted at different times carry different budgets).
-    Returns ``fn(mat, diag, state, tol, maxiter_vec) -> state``.
-    """
-    scheme = get_scheme(scheme)
-    key = ("step", backend, scheme.name, block_rows, col_tile, n_col_tiles,
-           n_row_blocks, chunk, interpret)
-
-    def make():
-        matvec_of = _matvec_factory(
-            backend=backend, scheme=scheme, block_rows=block_rows,
-            col_tile=col_tile, n_col_tiles=n_col_tiles,
-            n_row_blocks=n_row_blocks, interpret=interpret)
-
-        @jax.jit
-        def step(mat, diag, state, tol, maxiter_vec):
-            matvec = matvec_of(mat)
-            body = _batched_body(matvec, diag, tol, maxiter_vec)
-            start = state.k
-
-            def cond(s):
-                return (s.k - start < chunk) & jnp.any(s.active)
-
-            return jax.lax.while_loop(cond, body, state)
-
-        return step
-
-    return _cached(key, make)
-
-
 # ---------------------------------------------------------------- public
 def _as_csr(a) -> CSRMatrix:
     if isinstance(a, CSRMatrix):
@@ -315,15 +290,29 @@ def jpcg_solve_batched(problems: Sequence, bs: Optional[Sequence] = None,
                        x0s: Optional[Sequence] = None, *,
                        tol=1e-12, maxiter: int = 20_000,
                        scheme="mixed_v3", backend: str = "xla",
+                       engine: str = "vm", policy: Optional[str] = None,
+                       program: Optional[np.ndarray] = None,
                        block_rows: int = 256, col_tile: int = 512,
                        bucket: bool = True, with_trace: bool = False,
                        interpret: Optional[bool] = None) -> List[CGResult]:
     """Solve B independent SPD systems in one compiled ``lax.while_loop``.
 
-    See the module docstring for the batch API and bucket policy.  Lanes
-    terminate on the fly at their own ``‖r‖² ≤ tol_g``; the compiled loop
-    runs until every lane converged or ``maxiter``.
+    See the module docstring for the batch API, bucket policy, and the
+    ``engine``/``policy``/``program`` knobs (default: the batched stream
+    VM running the compiled paper-policy program; ``policy``/``program``
+    only make sense with ``engine="vm"`` and are rejected otherwise —
+    the phases engine hard-codes its schedule).  Lanes terminate on the
+    fly at their own ``‖r‖² ≤ tol_g``; the compiled loop runs until
+    every lane converged or ``maxiter``.
     """
+    if engine != "vm" and (policy is not None or program is not None):
+        raise ValueError(
+            f"policy=/program= select the stream-VM's program; they have "
+            f"no effect under engine={engine!r} — drop them or use "
+            "engine='vm'")
+    if policy is not None and program is not None:
+        raise ValueError("pass either policy= (compiled for you) or "
+                         "program= (pre-assembled), not both")
     scheme = get_scheme(scheme)
     if (scheme.vector_dtype == jnp.float64
             and not jax.config.read("jax_enable_x64")):
@@ -385,23 +374,54 @@ def jpcg_solve_batched(problems: Sequence, bs: Optional[Sequence] = None,
             raise ValueError(f"tol has {len(tol)} entries for {G} problems")
         tol_vec = jnp.asarray(np.asarray(tol, np.float64), vd)
 
-    key = ("solve", backend, scheme.name, G, bucket_dims, block_rows,
-           col_tile, stacked.n_col_tiles, maxiter, with_trace, interpret)
-    run = _cached(key, lambda: _make_runner(
-        backend=backend, scheme=scheme, maxiter=maxiter,
-        with_trace=with_trace, block_rows=block_rows, col_tile=col_tile,
-        n_col_tiles=stacked.n_col_tiles, n_row_blocks=n_row_blocks,
-        interpret=interpret))
-    st = run(mat, diag, b, x0, tol_vec)
+    if engine == "vm":
+        # The VM executable is keyed on the bucket — NOT on the program
+        # or policy; the program is a runtime operand (program *length*
+        # participates only through the operand's shape).
+        from repro.core.compile import canonical_program
+        from repro.core.isa import BUF, SREG
+        from repro.core.vm import make_vm_runner
+        if program is None:
+            policy = "paper" if policy is None else policy
+            program = canonical_program(policy)
+            method = f"vm_batched[{policy}]"
+        else:
+            method = "vm_batched[custom]"
+        key = ("vm_solve", backend, scheme.name, G, bucket_dims,
+               block_rows, col_tile, stacked.n_col_tiles, maxiter,
+               with_trace, interpret)
+        run = _cached(key, lambda: make_vm_runner(
+            backend=backend, scheme=scheme, maxiter=maxiter,
+            with_trace=with_trace, block_rows=block_rows,
+            col_tile=col_tile, n_col_tiles=stacked.n_col_tiles,
+            n_row_blocks=n_row_blocks, interpret=interpret))
+        st = run(jnp.asarray(np.asarray(program, np.int32)), mat, diag, b,
+                 x0, tol_vec)
+        xs = st.mem[BUF["x"]]
+        rrs_dev, trace_dev = st.sregs[SREG["rr"]], st.trace
+    elif engine == "phases":
+        key = ("solve", backend, scheme.name, G, bucket_dims, block_rows,
+               col_tile, stacked.n_col_tiles, maxiter, with_trace,
+               interpret)
+        run = _cached(key, lambda: _make_runner(
+            backend=backend, scheme=scheme, maxiter=maxiter,
+            with_trace=with_trace, block_rows=block_rows,
+            col_tile=col_tile, n_col_tiles=stacked.n_col_tiles,
+            n_row_blocks=n_row_blocks, interpret=interpret))
+        st = run(mat, diag, b, x0, tol_vec)
+        xs, rrs_dev, trace_dev = st.x, st.rr, st.trace
+        method = "vsr_batched"
+    else:
+        raise ValueError(f"unknown engine {engine!r}")
 
     its = np.asarray(st.it)
-    rrs = np.asarray(st.rr)
+    rrs = np.asarray(rrs_dev)
     tols = np.asarray(tol_vec)
     results = []
     for g in range(G):
-        trace = (np.asarray(st.trace[g])[: its[g]] if with_trace else None)
+        trace = (np.asarray(trace_dev[g])[: its[g]] if with_trace else None)
         results.append(CGResult(
-            x=st.x[g, : ns[g]], iterations=int(its[g]), rr=float(rrs[g]),
+            x=xs[g, : ns[g]], iterations=int(its[g]), rr=float(rrs[g]),
             converged=bool(rrs[g] <= tols[g]), residual_trace=trace,
-            scheme=scheme.name, method="vsr_batched"))
+            scheme=scheme.name, method=method))
     return results

@@ -46,6 +46,7 @@ import numpy as np
 __all__ = [
     "ITYPE_VCTRL", "ITYPE_COMP", "ITYPE_CTRL", "ITYPE_NOP",
     "MOD", "BUF", "SREG", "Instr", "assemble_jpcg", "derived_mem_instructions",
+    "decode_program", "program_text", "pad_program",
 ]
 
 ITYPE_VCTRL, ITYPE_COMP, ITYPE_CTRL, ITYPE_NOP = 0, 1, 2, 3
@@ -95,12 +96,18 @@ def _ctrl(which: int) -> Instr:
 
 
 def assemble_jpcg(policy: str = "paper") -> Tuple[np.ndarray, List[Instr]]:
-    """Emit one JPCG iteration under the VSR schedule.
+    """Emit one JPCG iteration under the VSR schedule — *golden reference*.
 
     Returns (encoded int32[P, 8] program, decoded instruction list).
     The two policies differ exactly as :mod:`repro.core.vsr` computes:
     ``paper`` re-runs M4+M5 in phase 3 (r' stored by the re-run pass-
     through), ``min_traffic`` stores r' straight out of phase 2.
+
+    Production programs come from the schedule→program compiler
+    (:func:`repro.core.compile.compile_policy`), which must reproduce this
+    hand assembly word for word for the paper policy — the lock lives in
+    ``tests/test_compile.py``.  This function stays as the human-audited
+    transcription of the paper's Fig. 2 / §5.5 controller sequence.
     """
     P: List[Instr] = []
     # ------- Phase 1: M1 (SpMV), M2 (dot) --------------------------------
@@ -149,6 +156,43 @@ def derived_mem_instructions(program: np.ndarray) -> dict:
     reads = int(vctrl[:, 2].sum())
     writes = int(vctrl[:, 3].sum())
     return {"reads": reads, "writes": writes, "total": reads + writes}
+
+
+def decode_program(program: np.ndarray) -> List[Instr]:
+    """Decode an int32[P, 8] word array back to :class:`Instr` records."""
+    return [Instr(*(int(v) for v in w)) for w in np.asarray(program)]
+
+
+def program_text(program: np.ndarray) -> str:
+    """Human-readable disassembly (one line per word) — for test diffs
+    and ARCHITECTURE.md walkthroughs, not for execution."""
+    buf_of = {v: k for k, v in BUF.items()}
+    mod_of = {v: k for k, v in MOD.items()}
+    sreg_of = {v: k for k, v in SREG.items()}
+    lines = []
+    for pc, i in enumerate(decode_program(program)):
+        if i.itype == ITYPE_VCTRL:
+            op = (f"rd   {buf_of[i.f1]:2s} -> q{i.qd}" if i.rd
+                  else f"wr   {buf_of[i.f1]:2s} <- q{i.qa}")
+        elif i.itype == ITYPE_COMP:
+            mod = mod_of[i.f1]
+            if mod in ("M2_dot_pap", "M6_dot_rz", "M8_dot_rr"):
+                op = f"{mod}: s[{sreg_of[i.sreg]}] = q{i.qa}.q{i.qb}"
+            elif mod == "M1_spmv":
+                op = f"{mod}: q{i.qd} = A @ q{i.qa}"
+            elif mod == "M5_div_z":
+                op = f"{mod}: q{i.qd} = q{i.qa} / q{i.qb}"
+            else:
+                sign = "-" if i.rd else "+"
+                op = (f"{mod}: q{i.qd} = q{i.qa} {sign} "
+                      f"s[{sreg_of[i.sreg]}]*q{i.qb}")
+        elif i.itype == ITYPE_CTRL:
+            op = ("ctrl alpha = rz/pap" if i.f1 == CTRL_ALPHA
+                  else "ctrl beta = rz'/rz ; rz <- rz'")
+        else:
+            op = "nop"
+        lines.append(f"{pc:3d}  {op}")
+    return "\n".join(lines)
 
 
 def pad_program(program: np.ndarray, length: int) -> np.ndarray:

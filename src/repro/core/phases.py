@@ -22,6 +22,13 @@ distinction is observable only at the VM/kernel level (see DESIGN.md).
 Termination is on-the-fly (paper Challenge 1): a ``lax.while_loop`` whose
 predicate reads the scalar ``rr`` produced *inside* the loop body — one
 compiled program serves any matrix and any iteration count.
+
+Since the batched stream VM became the default solver backend
+(:mod:`repro.core.vm`), this phase-fused loop is the VM's *oracle*: the
+batched engine keeps an ``engine="phases"`` path built from
+:func:`vsr_iteration`, and ``tests/test_compile.py`` asserts the VM's
+per-lane results are bit-identical to it.  Keep the two in lockstep —
+any arithmetic change here must reproduce in the compiled programs.
 """
 from __future__ import annotations
 

@@ -1,57 +1,74 @@
-"""Stream VM — executes stream-centric ISA programs (paper §3–§4).
+"""Batched stream VM — executes stream-centric ISA programs (paper §3–§4)
+for G independent systems at once, inside one compiled loop.
 
-The VM models Callipepla's top architecture (paper Fig. 1):
+The VM models Callipepla's top architecture (paper Fig. 1), widened by a
+lane dimension so it can serve the batched solver and the serving engine
+directly — this is the *single solver backend*; the phase-fused loop in
+:mod:`repro.core.phases` remains as its bit-exact oracle:
 
-* **memory** — a bank of named HBM vector buffers (x, r, p, ap, M, b);
-* **queues** — the inter-module FIFOs; since our "streaming" happens inside
-  fused XLA regions, a queue register holds one logical vector in flight
-  (fan-out is free, like the paper's VecCtrl element duplication);
-* **computation modules** M1–M8 dispatched by ``lax.switch`` — M1 is the
-  mixed-precision SpMV, M2/M6/M8 the dot modules, M3/M4/M7 the axpy
-  family, M5 the Jacobi left-divide;
+* **memory** — the HBM vector buffers (x, r, p, ap, M, b) as one
+  ``[6, G, n]`` array: buffer id × lane × element;
+* **queues** — the inter-module FIFOs, ``[8, G, n]``; a queue register
+  holds one logical vector in flight per lane (fan-out is free, like the
+  paper's VecCtrl element duplication);
+* **computation modules** M1–M8 dispatched by ``lax.switch`` — M1 routes
+  through the same batched SpMV closures as the phase engine
+  (:func:`repro.core.batch._matvec_factory`: XLA flat-stream or Pallas
+  ELLPACK), M2/M6/M8 are row-wise dot modules writing ``[G]`` scalar
+  registers, M3/M4/M7 the axpy family, M5 the Jacobi left-divide;
 * **global controller** — an outer ``lax.while_loop`` that runs the
-  program once per iteration, updates the scalar registers (α, β, rz, rr)
-  via CTRL instructions, and terminates on the fly when ``rr ≤ τ``
-  (paper Challenge 1).
+  program once per iteration and terminates each lane on the fly at its
+  own ``rr_g ≤ τ_g`` (paper Challenge 1, batched): every state write is
+  gated on the lane's ``active`` flag exactly like
+  :func:`repro.core.batch._batched_body`, so a converged lane's buffers
+  freeze mid-batch while the survivors keep iterating.
 
-The program is a *traced operand*: one compiled VM executes any program of
-the ISA (paper-policy, min-traffic, or anything else assembled from the
-module vocabulary) with **no retrace** — the JAX analogue of not re-running
-synthesis/place/route per problem.  ``tests/test_vm.py`` asserts bit-level
-agreement with the production solver and that NOP-padded program variants
-share one executable.
+The program is a *traced operand*: one compiled VM executable (cached per
+(bucket shape, backend, precision scheme) — plus the chunk size for the
+serving stepper — in the batch compile cache; the key deliberately
+excludes the program) runs paper-policy,
+min-traffic, plain-CG, or any other program of the same padded length
+with **no retrace** — the JAX analogue of not re-running synthesis/
+place/route per problem.  ``tests/test_compile.py`` asserts bit-level
+agreement with the phase engine and trace-count invariance across
+programs; the front doors are :func:`repro.core.batch.jpcg_solve_batched`
+(``engine="vm"``, the default) and :class:`repro.serve.SolverEngine`.
 """
 from __future__ import annotations
 
-from functools import partial
-from typing import NamedTuple
+from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.isa import (ITYPE_COMP, ITYPE_CTRL, ITYPE_NOP, ITYPE_VCTRL,
-                            BUF, SREG)
-from repro.core.operators import as_operator
+from repro.core.batch import _cached, _matvec_factory, _row_dot
+from repro.core.isa import BUF, SREG
 from repro.core.precision import get_scheme
 
-__all__ = ["VMState", "vm_solve"]
+__all__ = ["BatchedVMState", "make_vm_runner", "make_vm_stepper",
+           "vm_executable_stats", "vm_solve"]
 
 _N_QUEUES = 8
 _N_SREGS = 6
 
 
-class VMState(NamedTuple):
-    mem: jax.Array       # [6, n] HBM vector buffers
-    queues: jax.Array    # [8, n] inter-module streams
-    sregs: jax.Array     # [6]    scalar registers (alpha, beta, rz, rr, pap, rz')
-    i: jax.Array         # iteration counter
+class BatchedVMState(NamedTuple):
+    """Lane-batched VM state; every array's lane axis is G."""
+
+    k: jax.Array         # global tick (int32 scalar)
+    it: jax.Array        # int32[G] per-lane iteration counts
+    mem: jax.Array       # [6, G, n] HBM vector buffers (x r p ap M b)
+    queues: jax.Array    # [8, G, n] inter-module streams
+    sregs: jax.Array     # [6, G] scalar registers (α β rz rr pap rz')
+    active: jax.Array    # bool[G] live-lane mask
+    trace: jax.Array     # [G, maxiter] rr per iteration, or [G, 0]
 
 
-def _make_executor(op, vd):
-    """Build the per-instruction executor closed over the SpMV operator."""
+def _make_executor(matvec):
+    """Per-instruction executor closed over the batched SpMV closure."""
 
-    def exec_vctrl(w, st: VMState) -> VMState:
+    def exec_vctrl(w, st: BatchedVMState) -> BatchedVMState:
         buf, rd, wr, qa, qd = w[1], w[2], w[3], w[4], w[6]
         # rd: queue[qd] <- mem[buf] ; wr: mem[buf] <- queue[qa]
         q = jax.lax.cond(
@@ -64,21 +81,21 @@ def _make_executor(op, vd):
             lambda: st.mem)
         return st._replace(mem=m, queues=q)
 
-    def exec_comp(w, st: VMState) -> VMState:
+    def exec_comp(w, st: BatchedVMState) -> BatchedVMState:
         mod, neg, qa, qb, qd, sr = w[1], w[2], w[4], w[5], w[6], w[7]
-        a = st.queues[qa]
+        a = st.queues[qa]                       # [G, n]
         bq = st.queues[qb]
-        s = st.sregs[sr]
+        s = st.sregs[sr]                        # [G]
         s = jnp.where(neg == 1, -s, s)
 
         def spmv():      # M1
-            return st.queues.at[qd].set(op.matvec(a)), st.sregs
+            return st.queues.at[qd].set(matvec(a)), st.sregs
 
-        def dot():       # M2 / M6 / M8 -> scalar register
-            return st.queues, st.sregs.at[sr].set(jnp.dot(a, bq))
+        def dot():       # M2 / M6 / M8 -> scalar register (row-wise)
+            return st.queues, st.sregs.at[sr].set(_row_dot(a, bq))
 
-        def axpy():      # M3 / M4 / M7: dst = a + s·b
-            return st.queues.at[qd].set(a + s * bq), st.sregs
+        def axpy():      # M3 / M4 / M7: dst = a + s·b (per lane)
+            return st.queues.at[qd].set(a + s[:, None] * bq), st.sregs
 
         def div():       # M5: dst = a / b  (Jacobi left-divide)
             return st.queues.at[qd].set(a / bq), st.sregs
@@ -87,8 +104,8 @@ def _make_executor(op, vd):
         q, sregs = jax.lax.switch(branch, [spmv, dot, axpy, div])
         return st._replace(queues=q, sregs=sregs)
 
-    def exec_ctrl(w, st: VMState) -> VMState:
-        def alpha():     # α = rz / pap
+    def exec_ctrl(w, st: BatchedVMState) -> BatchedVMState:
+        def alpha():     # α = rz / pap, per lane
             return st.sregs.at[SREG["alpha"]].set(
                 st.sregs[SREG["rz"]] / st.sregs[SREG["pap"]])
 
@@ -99,10 +116,10 @@ def _make_executor(op, vd):
 
         return st._replace(sregs=jax.lax.switch(w[1], [alpha, beta]))
 
-    def exec_nop(w, st: VMState) -> VMState:
+    def exec_nop(w, st: BatchedVMState) -> BatchedVMState:
         return st
 
-    def execute(w, st: VMState) -> VMState:
+    def execute(w, st: BatchedVMState) -> BatchedVMState:
         return jax.lax.switch(
             w[0], [lambda: exec_vctrl(w, st), lambda: exec_comp(w, st),
                    lambda: exec_ctrl(w, st), lambda: exec_nop(w, st)])
@@ -110,57 +127,158 @@ def _make_executor(op, vd):
     return execute
 
 
-@partial(jax.jit, static_argnames=("tol", "maxiter", "scheme_name"))
-def _vm_run(program, op, mem0, sregs0, *, tol, maxiter, scheme_name):
-    scheme = get_scheme(scheme_name)
-    vd = scheme.vector_dtype
-    n = mem0.shape[1]
-    execute = _make_executor(op, vd)
-    st0 = VMState(mem=mem0, queues=jnp.zeros((_N_QUEUES, n), vd),
-                  sregs=sregs0, i=jnp.zeros((), jnp.int32))
+def vm_init(matvec, diag, b, x0, *, maxiter: int, with_trace: bool,
+            tol) -> BatchedVMState:
+    """Controller warm-up (paper Alg. 1 lines 1–5) — arithmetic identical
+    to :func:`repro.core.batch._batched_init`, packed into VM buffers."""
+    vd = b.dtype
+    G = b.shape[0]
+    r = b - matvec(x0)
+    z = r / diag
+    rz = _row_dot(r, z)
+    rr = _row_dot(r, r)
+    mem = jnp.stack([x0, r, z, jnp.zeros_like(r), diag, b])  # x r p ap M b
+    sregs = jnp.zeros((_N_SREGS, G), vd)
+    sregs = sregs.at[SREG["rz"]].set(rz).at[SREG["rr"]].set(rr)
+    return BatchedVMState(
+        k=jnp.zeros((), jnp.int32), it=jnp.zeros(G, jnp.int32), mem=mem,
+        queues=jnp.zeros((_N_QUEUES,) + r.shape, vd), sregs=sregs,
+        active=rr > tol,
+        trace=jnp.zeros((G, maxiter if with_trace else 0), vd))
 
-    def run_program(st: VMState) -> VMState:
+
+def _vm_body(program, matvec, tol, maxiter_vec=None):
+    """One VM tick = run the program once = one JPCG iteration per lane.
+
+    Frozen (converged) lanes flow through the arithmetic — dead compute
+    on a SIMD device — but ``mem``/``sregs`` writes are gated on
+    ``active``, mirroring the masking semantics of
+    :func:`repro.core.batch._batched_body` bit for bit.
+    """
+    execute = _make_executor(matvec)
+
+    def body(st: BatchedVMState) -> BatchedVMState:
         def step(pc, s):
             return execute(program[pc], s)
-        return jax.lax.fori_loop(0, program.shape[0], step, st)
 
-    def cond(st: VMState):
-        return (st.i < maxiter) & (st.sregs[SREG["rr"]] > tol)
+        nxt = jax.lax.fori_loop(0, program.shape[0], step, st)
+        keep = st.active
+        mem = jnp.where(keep[None, :, None], nxt.mem, st.mem)
+        sregs = jnp.where(keep[None, :], nxt.sregs, st.sregs)
+        it = st.it + keep.astype(jnp.int32)
+        rr = sregs[SREG["rr"]]
+        if st.trace.shape[1]:
+            trace = st.trace.at[:, st.k].set(
+                jnp.where(keep, nxt.sregs[SREG["rr"]], st.trace[:, st.k]))
+        else:
+            trace = st.trace
+        active = keep & (rr > tol)
+        if maxiter_vec is not None:
+            active = active & (it < maxiter_vec)
+        return BatchedVMState(k=st.k + 1, it=it, mem=mem,
+                              queues=nxt.queues, sregs=sregs,
+                              active=active, trace=trace)
 
-    def body(st: VMState):
-        st = run_program(st)
-        return st._replace(i=st.i + 1)
-
-    return jax.lax.while_loop(cond, body, st0)
+    return body
 
 
-def vm_solve(a, b=None, x0=None, *, program: np.ndarray, tol: float = 1e-12,
-             maxiter: int = 20_000, scheme="mixed_v3", diag=None,
-             block_rows: int = 256, col_tile: int = 512):
-    """Solve Ax=b by executing ``program`` on the stream VM."""
+# ------------------------------------------------------------ executables
+def make_vm_runner(*, backend, scheme, maxiter, with_trace, block_rows,
+                   col_tile, n_col_tiles, n_row_blocks, interpret=False):
+    """Build the jitted solve-to-completion VM runner for one bucket.
+
+    Returns ``run(program, mat, diag, b, x0, tol) -> BatchedVMState``.
+    The program is a runtime operand: callers cache this runner keyed on
+    the *bucket*, never on the program or VSR policy.
+    """
     scheme = get_scheme(scheme)
-    vd = scheme.vector_dtype
-    op = as_operator(a, scheme, diag=diag, block_rows=block_rows,
-                     col_tile=col_tile)
-    n = op.n
-    b = (jnp.ones(n, vd) if b is None else jnp.asarray(b)).astype(vd)
-    x0 = (jnp.zeros(n, vd) if x0 is None else jnp.asarray(x0)).astype(vd)
-    d = jnp.asarray(op.diag).astype(vd)
+    matvec_of = _matvec_factory(
+        backend=backend, scheme=scheme, block_rows=block_rows,
+        col_tile=col_tile, n_col_tiles=n_col_tiles,
+        n_row_blocks=n_row_blocks, interpret=interpret)
 
-    # Controller warm-up (paper merges Alg.1 lines 1–5 into the loop via the
-    # rp = −1 pass; we run them directly, like the production solver).
-    r0 = b - op.matvec(x0)
-    z0 = r0 / d
-    mem0 = jnp.stack([x0, r0, z0, jnp.zeros_like(r0), d, b])  # x r p ap M b
-    sregs0 = jnp.zeros(_N_SREGS, vd)
-    sregs0 = sregs0.at[SREG["rz"]].set(jnp.dot(r0, z0))
-    sregs0 = sregs0.at[SREG["rr"]].set(jnp.dot(r0, r0))
+    @jax.jit
+    def run(program, mat, diag, b, x0, tol):
+        matvec = matvec_of(mat)
+        st = vm_init(matvec, diag, b, x0, maxiter=maxiter,
+                     with_trace=with_trace, tol=tol)
+        body = _vm_body(program, matvec, tol)
 
-    st = _vm_run(jnp.asarray(program), op, mem0, sregs0, tol=tol,
-                 maxiter=maxiter, scheme_name=scheme.name)
-    return {
-        "x": st.mem[BUF["x"]],
-        "iterations": int(st.i),
-        "rr": float(st.sregs[SREG["rr"]]),
-        "converged": bool(st.sregs[SREG["rr"]] <= tol),
-    }
+        def cond(s):
+            return (s.k < maxiter) & jnp.any(s.active)
+
+        return jax.lax.while_loop(cond, body, st)
+
+    return run
+
+
+def make_vm_stepper(*, backend, scheme, block_rows, col_tile, n_col_tiles,
+                    n_row_blocks, chunk, interpret=False):
+    """Jitted bounded VM stepper for incremental serving (SolverEngine).
+
+    Runs at most ``chunk`` program executions (= iterations) from a given
+    state; per-lane budgets come in as ``maxiter_vec``.  Cached in the
+    batch compile cache keyed on (backend, scheme, bucket, chunk) — NOT
+    on the program, so every policy's program reuses one executable.
+    Returns ``step(program, mat, state, tol, maxiter_vec) -> state``
+    (no separate diag operand — the preconditioner lives in ``mem[M]``).
+    """
+    scheme = get_scheme(scheme)
+    key = ("vm_step", backend, scheme.name, block_rows, col_tile,
+           n_col_tiles, n_row_blocks, chunk, interpret)
+
+    def make():
+        matvec_of = _matvec_factory(
+            backend=backend, scheme=scheme, block_rows=block_rows,
+            col_tile=col_tile, n_col_tiles=n_col_tiles,
+            n_row_blocks=n_row_blocks, interpret=interpret)
+
+        @jax.jit
+        def step(program, mat, state, tol, maxiter_vec):
+            matvec = matvec_of(mat)
+            body = _vm_body(program, matvec, tol, maxiter_vec)
+            start = state.k
+
+            def cond(s):
+                return (s.k - start < chunk) & jnp.any(s.active)
+
+            return jax.lax.while_loop(cond, body, state)
+
+        return step
+
+    return _cached(key, make)
+
+
+def vm_executable_stats() -> dict:
+    """VM executables in the batch compile cache + total traced shapes.
+
+    ``traces`` counts jit cache entries across all VM runners/steppers:
+    running a *different program* through an existing executable must not
+    change it (the no-retrace acceptance check); only a new bucket shape,
+    backend, scheme, or program *length* may.
+    """
+    from repro.core.batch import _CACHE
+    fns = [fn for k, fn in _CACHE.items()
+           if isinstance(k, tuple) and k and str(k[0]).startswith("vm_")]
+    return {"executables": len(fns),
+            "traces": int(sum(f._cache_size() for f in fns))}
+
+
+# ---------------------------------------------------------------- public
+def vm_solve(a, b=None, x0=None, *, program: np.ndarray, tol: float = 1e-12,
+             maxiter: int = 20_000, scheme="mixed_v3",
+             block_rows: int = 256, col_tile: int = 512,
+             backend: str = "xla", interpret: Optional[bool] = None) -> dict:
+    """Solve Ax=b by executing ``program`` on the stream VM (batch of 1).
+
+    Thin wrapper over :func:`repro.core.batch.jpcg_solve_batched` with
+    ``engine="vm"`` — the single-system view of the one solver backend.
+    """
+    from repro.core.batch import jpcg_solve_batched
+    res = jpcg_solve_batched(
+        [a], None if b is None else [b], None if x0 is None else [x0],
+        tol=tol, maxiter=maxiter, scheme=scheme, backend=backend,
+        engine="vm", program=program, block_rows=block_rows,
+        col_tile=col_tile, interpret=interpret)[0]
+    return {"x": res.x, "iterations": res.iterations, "rr": res.rr,
+            "converged": res.converged}

@@ -34,9 +34,12 @@ Two policies:
   the M4 re-execution: **13 accesses = 9 reads + 4 writes**, strictly
   better than the paper.  First beyond-paper optimization (EXPERIMENTS.md).
 
-The production solver (:mod:`repro.core.phases`) follows this schedule and
-the instruction-set VM (:mod:`repro.core.vm`) executes it instruction by
-instruction; tests assert all three counts (19 / 14 / 13).
+The production solver (:mod:`repro.core.phases`) follows this schedule,
+and the schedule→program compiler (:mod:`repro.core.compile`) lowers it
+mechanically to a stream-ISA program for the batched VM
+(:mod:`repro.core.vm`) — the compiler validates its emitted HBM traffic
+against ``hbm_reads``/``hbm_writes`` phase by phase, so the 19 / 14 / 13
+accounting asserted here is enforced at the instruction level too.
 """
 from __future__ import annotations
 

@@ -1,6 +1,7 @@
 """Serving substrate: KV/state caches + slot-based batched decode engine
 (+ int8 quantized cache — Mix-V3 one tier further; + slot-based batched
-CG solver engine — continuous batching for linear systems)."""
+CG solver engine running on the stream VM — continuous batching for
+linear systems with per-request VSR policy and precision scheme)."""
 from repro.serve.engine import DecodeEngine, EngineConfig
 from repro.serve.kv_cache import (bytes_per_slot, cache_bytes, init_cache,
                                   slot_insert, slot_view)

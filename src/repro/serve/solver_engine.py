@@ -1,41 +1,62 @@
-"""Slot-based CG solver engine — continuous batching for linear systems.
+"""Slot-based CG solver engine — continuous batching on the stream VM.
 
-The solver twin of :class:`repro.serve.engine.DecodeEngine`: a fixed pool
-of ``batch_slots`` problem slots iterates in lock-step (one jitted
-chunked tick over the whole batch), and slots are independent — each
-carries its own tolerance, iteration budget, and ``active`` flag, so a
-new system can be admitted the moment an old one converges, without
-disturbing in-flight lanes (their state is frozen by the same masked
-updates the batched solver uses).
+The solver twin of :class:`repro.serve.engine.DecodeEngine`, re-plumbed so
+the batched stream VM (:mod:`repro.core.vm`) is the one execution backend:
+every tick runs one jitted chunked VM step (≤ ``chunk_iters`` executions
+of a stream-ISA program) over a fixed pool of problem slots.  Slots are
+independent — each carries its own tolerance, iteration budget, and
+``active`` flag, so a new system is admitted the moment an old one
+converges, without disturbing in-flight lanes (their ``mem`` buffers are
+frozen by the VM's masked updates).
+
+Per-request policy and precision
+--------------------------------
+``submit(..., policy=, scheme=)`` overrides the engine-wide defaults per
+request.  Requests are grouped into **pools** keyed by
+``(scheme, policy)``; each pool owns ``batch_slots`` slots, its own
+bucket, and its own compiled *program* — but programs are runtime
+operands, so the compile-cache consequences are deliberately asymmetric:
+
+* a new **scheme** (or a new bucket shape) costs one new VM executable —
+  the cache key is ``(backend, scheme, bucket dims, chunk)``;
+* a new **policy** costs *nothing*: pools that differ only in policy
+  share one jitted stepper and just pass a different ``int32[P, 8]``
+  program (all programs are NOP-padded to one canonical length by
+  :func:`repro.core.compile.canonical_program`).  This is the paper's
+  one-bitstream-serves-any-schedule property, surfaced as an API
+  guarantee; ``tests/test_compile.py`` asserts the trace counter stays
+  flat across policies.
 
 Admission (:meth:`SolverEngine.submit`) pads the problem's banked-ELL
-arrays into a free slot of the engine's shared *bucket* shape and runs
-the JPCG warm-up (r₀ = b − A·x₀, z₀ = M⁻¹r₀) for that lane only.  The
-bucket is sized lazily from the first admitted problem (dimensions
+arrays into a free slot of the pool's shared bucket shape and runs the
+JPCG warm-up (r₀ = b − A·x₀, z₀ = M⁻¹r₀) for that lane only.  The bucket
+is sized lazily from the pool's first admitted problem (dimensions
 rounded up to power-of-two edges, :func:`repro.sparse.stacking.bucket_up`)
-and grows — with one recompile — only when a larger problem arrives, so
-steady traffic of similar systems reuses a single executable, exactly
-the compile-cache policy of :mod:`repro.core.batch`.
+and grows — with one recompile — only when a larger problem arrives.
 
 >>> eng = SolverEngine(SolverEngineConfig(batch_slots=8, block_rows=8,
 ...                                       col_tile=128))
->>> rid = eng.submit(a, tol=1e-12)
->>> done = eng.run_to_completion()          # {rid: CGResult}
+>>> rid = eng.submit(a, tol=1e-12)                      # paper policy
+>>> rid2 = eng.submit(a2, policy="min_traffic")         # same executable
+>>> done = eng.run_to_completion()                      # {rid: CGResult}
 """
 from __future__ import annotations
 
 import dataclasses
 from functools import partial
-from typing import Dict, Optional
+from typing import Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.batch import (BatchedCGState, _as_csr, batched_matvec_flat,
-                              batched_matvec_ellpack, make_batched_stepper)
+from repro.core.batch import (_as_csr, batched_matvec_flat,
+                              batched_matvec_ellpack)
 from repro.core.cg import CGResult
+from repro.core.compile import canonical_program
+from repro.core.isa import BUF, SREG
 from repro.core.precision import get_scheme
+from repro.core.vm import BatchedVMState, make_vm_stepper
 from repro.sparse.bell import csr_to_bell
 from repro.sparse.ellpack import csr_to_ellpack
 from repro.sparse.stacking import bucket_up, flatten_bell, pad_ellpack
@@ -45,8 +66,9 @@ __all__ = ["SolverEngineConfig", "SolverEngine"]
 
 @dataclasses.dataclass(frozen=True)
 class SolverEngineConfig:
-    batch_slots: int = 8
-    scheme: str = "mixed_v3"
+    batch_slots: int = 8              # slots per (scheme, policy) pool
+    scheme: str = "mixed_v3"          # default; per-request override
+    policy: str = "paper"             # default VSR policy; per-request
     tol: float = 1e-12                # default; per-request override
     maxiter: int = 20_000             # default; per-request override
     chunk_iters: int = 64             # iterations per tick
@@ -79,28 +101,24 @@ def _lane_init_ell(tc, v, lc, diag, b, x0, *, col_tile, n_col_tiles,
     return r, z, jnp.dot(r, z), jnp.dot(r, r)
 
 
-class SolverEngine:
-    """Admit SPD systems into batch slots; solve them in shared ticks."""
+class _Pool:
+    """Slots + VM state for one (scheme, policy) request class."""
 
-    def __init__(self, cfg: SolverEngineConfig):
+    def __init__(self, cfg: SolverEngineConfig, scheme, policy: str,
+                 interpret: bool):
         self.cfg = cfg
-        self.scheme = get_scheme(cfg.scheme)
-        if cfg.interpret is None:
-            from repro.kernels.ops import default_interpret
-            self.interpret = default_interpret()
-        else:
-            self.interpret = cfg.interpret
+        self.scheme = scheme
+        self.policy = policy
+        self.interpret = interpret
+        self.program = jnp.asarray(canonical_program(policy))
         S = cfg.batch_slots
-        self._req_of_slot: list = [None] * S     # request id or None
-        self._n_of_slot = np.zeros(S, np.int64)  # logical n per slot
-        self._next_id = 0
-        self._bucket = None                      # (B, T, L, n_tiles)
-        self._mat = None                         # stacked device arrays
-        self._state: Optional[BatchedCGState] = None
-        self._diag = None
-        self._tol = None
-        self._maxiter_vec = None
-        self.results: Dict[int, CGResult] = {}
+        self.req_of_slot: list = [None] * S      # request id or None
+        self.n_of_slot = np.zeros(S, np.int64)   # logical n per slot
+        self.bucket = None                       # per-backend dims tuple
+        self.mat = None                          # slot-stacked arrays
+        self.state: Optional[BatchedVMState] = None
+        self.tol = None
+        self.maxiter_vec = None
 
     # ------------------------------------------------------------ sizing
     def _dims_of(self, m):
@@ -120,7 +138,7 @@ class SolverEngine:
         vd = self.scheme.vector_dtype
         md = self.scheme.matrix_dtype
         n_pad = B * self.cfg.block_rows
-        old_mat, old_state = self._mat, self._state
+        old_mat, old_state = self.mat, self.state
 
         if self.cfg.backend == "xla":
             N = dims[1]
@@ -133,12 +151,12 @@ class SolverEngine:
             mat = (jnp.zeros((S, B, T), jnp.int32),
                    jnp.zeros((S, B, T, L, R), md),
                    jnp.zeros((S, B, T, L, R), jnp.int32))
-        diag = jnp.ones((S, n_pad), vd)
-        zeros = jnp.zeros((S, n_pad), vd)
-        state = BatchedCGState(
+        mem = jnp.zeros((6, S, n_pad), vd)
+        mem = mem.at[BUF["M"]].set(1.0)          # unit diag on empty rows
+        state = BatchedVMState(
             k=jnp.zeros((), jnp.int32), it=jnp.zeros(S, jnp.int32),
-            x=zeros, r=zeros, p=zeros, rz=jnp.zeros(S, vd),
-            rr=jnp.zeros(S, vd), active=jnp.zeros(S, bool),
+            mem=mem, queues=jnp.zeros((8, S, n_pad), vd),
+            sregs=jnp.zeros((6, S), vd), active=jnp.zeros(S, bool),
             trace=jnp.zeros((S, 0), vd))
         tol = jnp.full(S, self.cfg.tol, vd)
         maxiter_vec = jnp.zeros(S, jnp.int32)
@@ -149,38 +167,26 @@ class SolverEngine:
                 pads = [(0, n - o) for n, o in zip(new.shape, old.shape)]
                 return jnp.pad(old, pads)
             mat = tuple(grow(n, o) for n, o in zip(mat, old_mat))
-            diag = diag.at[:, : old_state.x.shape[1]].set(self._diag)
-            state = BatchedCGState(
-                k=old_state.k, it=old_state.it,
-                x=zeros.at[:, : old_state.x.shape[1]].set(old_state.x),
-                r=zeros.at[:, : old_state.r.shape[1]].set(old_state.r),
-                p=zeros.at[:, : old_state.p.shape[1]].set(old_state.p),
-                rz=old_state.rz, rr=old_state.rr, active=old_state.active,
-                trace=state.trace)
-            tol, maxiter_vec = self._tol, self._maxiter_vec
-        self._bucket = dims
-        self._mat = mat
-        self._diag = diag
-        self._state = state
-        self._tol = tol
-        self._maxiter_vec = maxiter_vec
+            old_n = old_state.mem.shape[-1]
+            mem = mem.at[:, :, :old_n].set(old_state.mem)
+            state = state._replace(
+                k=old_state.k, it=old_state.it, mem=mem,
+                sregs=old_state.sregs, active=old_state.active)
+            tol, maxiter_vec = self.tol, self.maxiter_vec
+        self.bucket = dims
+        self.mat = mat
+        self.state = state
+        self.tol = tol
+        self.maxiter_vec = maxiter_vec
 
-    # ------------------------------------------------------------ public
-    @property
-    def free_slots(self) -> int:
-        return sum(r is None for r in self._req_of_slot)
-
-    @property
-    def active_count(self) -> int:
-        return 0 if self._state is None else int(self._state.active.sum())
-
-    def submit(self, a, b=None, x0=None, *, tol: Optional[float] = None,
-               maxiter: Optional[int] = None) -> int:
-        """Admit one SPD system into a free slot; returns the request id."""
-        self._harvest()        # a lane done since the last tick frees its slot
-        free = [s for s, r in enumerate(self._req_of_slot) if r is None]
+    # ---------------------------------------------------------- admission
+    def admit(self, a, b, x0, tol, maxiter) -> int:
+        """Place one system into a free slot; returns the slot index."""
+        free = [s for s, r in enumerate(self.req_of_slot) if r is None]
         if not free:
-            raise RuntimeError("no free solver slots")
+            raise RuntimeError(
+                f"no free solver slots in pool "
+                f"(scheme={self.scheme.name}, policy={self.policy})")
         s = free[0]
         cfg = self.cfg
         a = _as_csr(a)
@@ -191,27 +197,27 @@ class SolverEngine:
             m = csr_to_ellpack(a, block_rows=cfg.block_rows,
                                col_tile=cfg.col_tile)
         dims = tuple(bucket_up(d) for d in self._dims_of(m))
-        if self._bucket is None or any(d > o for d, o in
-                                       zip(dims, self._bucket)):
-            grown = dims if self._bucket is None else tuple(
-                max(d, o) for d, o in zip(dims, self._bucket))
+        if self.bucket is None or any(d > o for d, o in
+                                      zip(dims, self.bucket)):
+            grown = dims if self.bucket is None else tuple(
+                max(d, o) for d, o in zip(dims, self.bucket))
             self._alloc(grown)
         if cfg.backend == "xla":
             gc, v, rw = flatten_bell(m)
-            N = self._bucket[1]
+            N = self.bucket[1]
             lanes = tuple(np.pad(x, (0, N - x.shape[0]))
                           for x in (gc, v, rw))
         else:
-            B, T, L, _ = self._bucket
+            B, T, L, _ = self.bucket
             m = pad_ellpack(m, n_row_blocks=B, n_slabs=T, ell=L)
             lanes = (m.tile_cols, m.vals, m.local_cols)
-        self._mat = tuple(
+        self.mat = tuple(
             arr.at[s].set(jnp.asarray(lane).astype(arr.dtype))
-            for arr, lane in zip(self._mat, lanes))
+            for arr, lane in zip(self.mat, lanes))
 
         vd = self.scheme.vector_dtype
         n = a.shape[0]
-        n_pad = self._diag.shape[1]
+        n_pad = self.state.mem.shape[-1]
         d = np.ones(n_pad)
         d[:n] = a.diagonal()
         bb = np.zeros(n_pad)
@@ -222,75 +228,141 @@ class SolverEngine:
         diag_l = jnp.asarray(d, vd)
         b_l = jnp.asarray(bb, vd)
         x0_l = jnp.asarray(xx, vd)
-        self._diag = self._diag.at[s].set(diag_l)
 
-        n_tiles = self._bucket[-1]
+        n_tiles = self.bucket[-1]
         if cfg.backend == "xla":
-            gc, v, rw = (arr[s] for arr in self._mat)
+            gc, v, rw = (arr[s] for arr in self.mat)
             r, z, rz, rr = _lane_init_flat(
                 gc, v, rw, diag_l, b_l, x0_l, n_rows=n_pad,
                 padded_cols=n_tiles * cfg.col_tile, scheme=self.scheme)
         else:
-            tc, v, lc = (arr[s] for arr in self._mat)
+            tc, v, lc = (arr[s] for arr in self.mat)
             r, z, rz, rr = _lane_init_ell(
                 tc, v, lc, diag_l, b_l, x0_l, col_tile=cfg.col_tile,
                 n_col_tiles=n_tiles, scheme=self.scheme,
                 interpret=self.interpret)
 
-        st = self._state
+        st = self.state
+        lane_mem = jnp.stack([x0_l, r, z, jnp.zeros_like(r), diag_l, b_l])
         req_tol = jnp.asarray(cfg.tol if tol is None else tol, vd)
-        self._state = BatchedCGState(
-            k=st.k, it=st.it.at[s].set(0),
-            x=st.x.at[s].set(x0_l), r=st.r.at[s].set(r),
-            p=st.p.at[s].set(z), rz=st.rz.at[s].set(rz),
-            rr=st.rr.at[s].set(rr),
-            active=st.active.at[s].set(rr > req_tol), trace=st.trace)
-        self._tol = self._tol.at[s].set(req_tol)
-        self._maxiter_vec = self._maxiter_vec.at[s].set(
+        sregs = st.sregs.at[:, s].set(0.0)
+        sregs = sregs.at[SREG["rz"], s].set(rz)
+        sregs = sregs.at[SREG["rr"], s].set(rr)
+        self.state = st._replace(
+            it=st.it.at[s].set(0), mem=st.mem.at[:, s].set(lane_mem),
+            queues=st.queues.at[:, s].set(0.0), sregs=sregs,
+            active=st.active.at[s].set(rr > req_tol))
+        self.tol = self.tol.at[s].set(req_tol)
+        self.maxiter_vec = self.maxiter_vec.at[s].set(
             cfg.maxiter if maxiter is None else maxiter)
+        self.n_of_slot[s] = n
+        return s
 
+    # -------------------------------------------------------------- tick
+    @property
+    def any_active(self) -> bool:
+        return self.state is not None and bool(self.state.active.any())
+
+    def step(self) -> None:
+        cfg = self.cfg
+        stepper = make_vm_stepper(
+            backend=cfg.backend, scheme=self.scheme,
+            block_rows=cfg.block_rows, col_tile=cfg.col_tile,
+            n_col_tiles=self.bucket[-1], n_row_blocks=self.bucket[0],
+            chunk=cfg.chunk_iters, interpret=self.interpret)
+        self.state = stepper(self.program, self.mat, self.state, self.tol,
+                             self.maxiter_vec)
+
+    def harvest(self) -> Dict[int, CGResult]:
+        if self.state is None:
+            return {}
+        done: Dict[int, CGResult] = {}
+        active = np.asarray(self.state.active)
+        its = np.asarray(self.state.it)
+        rrs = np.asarray(self.state.sregs[SREG["rr"]])
+        tols = np.asarray(self.tol)
+        for s, rid in enumerate(self.req_of_slot):
+            if rid is None or active[s]:
+                continue
+            n = int(self.n_of_slot[s])
+            done[rid] = CGResult(
+                x=self.state.mem[BUF["x"], s, :n], iterations=int(its[s]),
+                rr=float(rrs[s]), converged=bool(rrs[s] <= tols[s]),
+                residual_trace=None, scheme=self.scheme.name,
+                method=f"vm_engine[{self.policy}]")
+            self.req_of_slot[s] = None
+        return done
+
+
+class SolverEngine:
+    """Admit SPD systems into batch slots; solve them on the stream VM."""
+
+    def __init__(self, cfg: SolverEngineConfig):
+        self.cfg = cfg
+        if cfg.interpret is None:
+            from repro.kernels.ops import default_interpret
+            self.interpret = default_interpret()
+        else:
+            self.interpret = cfg.interpret
+        self._pools: Dict[Tuple[str, str], _Pool] = {}
+        self._next_id = 0
+        self.results: Dict[int, CGResult] = {}
+
+    def _pool(self, scheme: Optional[str], policy: Optional[str]) -> _Pool:
+        scheme = get_scheme(self.cfg.scheme if scheme is None else scheme)
+        policy = self.cfg.policy if policy is None else policy
+        key = (scheme.name, policy)
+        if key not in self._pools:
+            self._pools[key] = _Pool(self.cfg, scheme, policy,
+                                     self.interpret)
+        return self._pools[key]
+
+    # ------------------------------------------------------------ public
+    @property
+    def free_slots(self) -> int:
+        """Free slots in the default (scheme, policy) pool."""
+        key = (get_scheme(self.cfg.scheme).name, self.cfg.policy)
+        pool = self._pools.get(key)
+        if pool is None:
+            return self.cfg.batch_slots
+        return sum(r is None for r in pool.req_of_slot)
+
+    @property
+    def active_count(self) -> int:
+        return sum(int(p.state.active.sum()) for p in self._pools.values()
+                   if p.state is not None)
+
+    def submit(self, a, b=None, x0=None, *, tol: Optional[float] = None,
+               maxiter: Optional[int] = None, policy: Optional[str] = None,
+               scheme: Optional[str] = None) -> int:
+        """Admit one SPD system; returns the request id.
+
+        ``policy``/``scheme`` override the engine defaults per request and
+        route the system to the matching (scheme, policy) pool — see the
+        module docstring for what each override costs in executables.
+        """
+        self._harvest()        # a lane done since the last tick frees its slot
+        pool = self._pool(scheme, policy)
+        s = pool.admit(a, b, x0, tol, maxiter)
         rid = self._next_id
         self._next_id += 1
-        self._req_of_slot[s] = rid
-        self._n_of_slot[s] = n
+        pool.req_of_slot[s] = rid
         return rid
 
     def step(self) -> Dict[int, CGResult]:
         """One chunked tick (≤ ``chunk_iters`` iterations for every live
-        lane); harvests and frees slots that finished, returning
-        ``{request_id: CGResult}``."""
-        if self._state is None or not bool(self._state.active.any()):
-            return self._harvest()
-        cfg = self.cfg
-        stepper = make_batched_stepper(
-            backend=cfg.backend, scheme=self.scheme,
-            block_rows=cfg.block_rows, col_tile=cfg.col_tile,
-            n_col_tiles=self._bucket[-1], n_row_blocks=self._bucket[0],
-            chunk=cfg.chunk_iters, interpret=self.interpret)
-        self._state = stepper(self._mat, self._diag, self._state,
-                              self._tol, self._maxiter_vec)
+        lane in every pool); harvests and frees slots that finished,
+        returning ``{request_id: CGResult}``."""
+        for pool in self._pools.values():
+            if pool.any_active:
+                pool.step()
         return self._harvest()
 
     def _harvest(self) -> Dict[int, CGResult]:
-        if self._state is None:
-            return {}
         done: Dict[int, CGResult] = {}
-        active = np.asarray(self._state.active)
-        its = np.asarray(self._state.it)
-        rrs = np.asarray(self._state.rr)
-        tols = np.asarray(self._tol)
-        for s, rid in enumerate(self._req_of_slot):
-            if rid is None or active[s]:
-                continue
-            n = int(self._n_of_slot[s])
-            res = CGResult(
-                x=self._state.x[s, :n], iterations=int(its[s]),
-                rr=float(rrs[s]), converged=bool(rrs[s] <= tols[s]),
-                residual_trace=None, scheme=self.scheme.name,
-                method="vsr_batched")
-            done[rid] = res
-            self.results[rid] = res
-            self._req_of_slot[s] = None
+        for pool in self._pools.values():
+            done.update(pool.harvest())
+        self.results.update(done)
         return done
 
     def run_to_completion(self, max_ticks: int = 10_000) -> Dict[int, CGResult]:
@@ -301,10 +373,11 @@ class SolverEngine:
         out: Dict[int, CGResult] = {}
         out.update(self._harvest())
         ticks = 0
-        while self._state is not None and bool(self._state.active.any()):
+        while any(p.any_active for p in self._pools.values()):
             if ticks >= max_ticks:
-                live = [rid for s, rid in enumerate(self._req_of_slot)
-                        if rid is not None and bool(self._state.active[s])]
+                live = [rid for p in self._pools.values()
+                        for s, rid in enumerate(p.req_of_slot)
+                        if rid is not None and bool(p.state.active[s])]
                 raise RuntimeError(
                     f"run_to_completion hit max_ticks={max_ticks} with "
                     f"requests {live} still active (chunk_iters="

@@ -171,3 +171,44 @@ class TestSolverEngine:
         eng.run_to_completion()
         assert eng.results[rid].iterations == 5
         assert not eng.results[rid].converged
+
+    def test_per_request_policy_shares_executable(self):
+        """submit(policy=) routes to a separate pool, but pools differing
+        only in policy share one jitted VM stepper — the program is an
+        operand, not part of the cache key."""
+        from repro.core.vm import vm_executable_stats
+        eng = SolverEngine(SolverEngineConfig(batch_slots=2, chunk_iters=32,
+                                              **BK))
+        a = poisson_2d(16)
+        r1 = eng.submit(a)                          # cfg default: paper
+        eng.step()
+        before = vm_executable_stats()
+        r2 = eng.submit(a, policy="min_traffic")
+        eng.run_to_completion()
+        after = vm_executable_stats()
+        assert after["traces"] == before["traces"]  # no new trace
+        g1, g2 = eng.results[r1], eng.results[r2]
+        assert g1.method == "vm_engine[paper]"
+        assert g2.method == "vm_engine[min_traffic]"
+        # same arithmetic, different traffic schedule: identical results
+        assert g1.iterations == g2.iterations
+        np.testing.assert_array_equal(np.asarray(g1.x), np.asarray(g2.x))
+
+    def test_per_request_scheme(self):
+        """submit(scheme=) solves that request at its own precision; the
+        result records the scheme and matches the single-system solver."""
+        eng = SolverEngine(SolverEngineConfig(batch_slots=2, chunk_iters=64,
+                                              scheme="mixed_v3", **BK))
+        a = tridiagonal_spd(200)
+        r64 = eng.submit(a, scheme="fp64")
+        rv3 = eng.submit(a)
+        eng.run_to_completion()
+        assert eng.results[r64].scheme == "fp64"
+        assert eng.results[rv3].scheme == "mixed_v3"
+        for rid, scheme in ((r64, "fp64"), (rv3, "mixed_v3")):
+            ref = jpcg_solve(a, tol=1e-12, maxiter=20_000, scheme=scheme,
+                             **BK)
+            assert abs(eng.results[rid].iterations - ref.iterations) <= 1
+            np.testing.assert_allclose(np.asarray(eng.results[rid].x),
+                                       np.asarray(ref.x), rtol=1e-6,
+                                       atol=1e-8)

@@ -1,0 +1,211 @@
+"""Schedule→program compiler + batched stream VM (the single backend).
+
+Locks the ISSUE-2 pipeline: vsr.schedule → compile → batched VM → engine.
+
+* word-identity: the compiler reproduces the hand assembly exactly for
+  the paper policy (``assemble_jpcg`` is the golden reference);
+* traffic: compiled programs' derived Type-III memory streams equal the
+  §5.5 VSR accounting for both policies (14 = 10R+4W, 13 = 9R+4W);
+* bit-identity: VM lane results are bit-equal to the phase-fused batched
+  engine across all faithful-tier precision schemes, with per-lane
+  on-the-fly termination;
+* no-retrace: one jitted VM executable runs paper, min-traffic, and
+  plain-CG programs (compile-cache entries and jit trace counts stay
+  flat when only the program operand changes).
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core.batch import (batch_cache_clear, batch_cache_info,
+                              jpcg_solve_batched)
+from repro.core.cg import jpcg_solve
+from repro.core.compile import (PLAIN_CG_MODULES, CompileError,
+                                canonical_length, canonical_program,
+                                compile_policy, compile_schedule)
+from repro.core.isa import (ITYPE_NOP, assemble_jpcg, decode_program,
+                            derived_mem_instructions, program_text)
+from repro.core.vm import vm_executable_stats, vm_solve
+from repro.core.vsr import access_counts, schedule
+from repro.sparse import (csr_to_dense, diag_dominant_spd, poisson_2d,
+                          tridiagonal_spd)
+
+BK = dict(block_rows=8, col_tile=128)
+
+
+def _bag():
+    """Heterogeneous SPD systems sharing one bucket-able shape range."""
+    return [poisson_2d(16), tridiagonal_spd(300),
+            diag_dominant_spd(200, nnz_per_row=8, dominance=1.3, seed=2)]
+
+
+# ------------------------------------------------------------- compiler
+class TestCompiler:
+    def test_paper_program_word_identical_to_hand_assembly(self):
+        """The tentpole lock: compiling vsr.schedule(policy="paper") must
+        reproduce the golden hand assembly word for word."""
+        ref, _ = assemble_jpcg("paper")
+        got = compile_policy("paper").program
+        assert np.array_equal(got, ref), (
+            "compiled paper program drifted from assemble_jpcg:\n"
+            f"compiled:\n{program_text(got)}\nreference:\n"
+            f"{program_text(ref)}")
+
+    @pytest.mark.parametrize("policy,reads,writes", [("paper", 10, 4),
+                                                     ("min_traffic", 9, 4)])
+    def test_derived_traffic_matches_vsr_accounting(self, policy, reads,
+                                                    writes):
+        """§5.5: the compiled program's Type-III InstRdWr stream equals
+        vsr.access_counts — 14 = 10R+4W paper, 13 = 9R+4W min-traffic."""
+        mem = derived_mem_instructions(compile_policy(policy).program)
+        assert mem == {"reads": reads, "writes": writes,
+                       "total": reads + writes}
+        assert mem["reads"] == access_counts()[policy]["reads"]
+        assert mem["writes"] == access_counts()[policy]["writes"]
+
+    def test_canonical_programs_share_one_length(self):
+        L = canonical_length()
+        for pol in ("paper", "min_traffic"):
+            prog = canonical_program(pol)
+            assert prog.shape == (L, 8)
+            pad = prog[compile_policy(pol).length:]
+            assert (pad[:, 0] == ITYPE_NOP).all()
+
+    def test_decode_roundtrip(self):
+        enc = compile_policy("paper").program
+        again = np.asarray([i.encode() for i in decode_program(enc)],
+                           np.int32)
+        assert np.array_equal(enc, again)
+        assert "M1_spmv" in program_text(enc)
+
+    def test_traffic_validation_rejects_tampered_schedule(self):
+        """The compiler refuses a schedule whose HBM plan it cannot
+        implement — emitted traffic is validated phase by phase."""
+        s = schedule(policy="paper")
+        bad = dataclasses.replace(
+            s, hbm_reads=(("p",),) + s.hbm_reads[1:])  # claims 1 read, needs 2
+        with pytest.raises(CompileError):
+            compile_schedule(bad)
+
+    def test_unknown_module_rejected(self):
+        """A schedule naming a module outside the M1–M8 ISA vocabulary
+        cannot be lowered."""
+        s = schedule(policy="min_traffic")
+        bad = dataclasses.replace(s, phases=(("M9_mystery",),) + s.phases[1:])
+        with pytest.raises(CompileError):
+            compile_schedule(bad)
+
+    def test_plain_cg_module_graph_compiles(self):
+        """The compiler serves module graphs beyond the paper's: plain CG
+        drops M5 and lowers to 11 accesses (7R + 4W)."""
+        cp = compile_policy("min_traffic", PLAIN_CG_MODULES)
+        assert derived_mem_instructions(cp.program) == {
+            "reads": 7, "writes": 4, "total": 11}
+
+
+# ------------------------------------------------------ batched stream VM
+@pytest.mark.vm
+class TestBatchedVM:
+    @pytest.mark.parametrize("scheme", ["fp64", "mixed_v1", "mixed_v2",
+                                        "mixed_v3"])
+    def test_vm_bit_identical_to_phases_engine(self, scheme):
+        """Per-lane VM results (x, iterations, rr) are BIT-identical to
+        the phase-fused batched engine under every faithful-tier scheme —
+        the compiled program executes the same arithmetic in the same
+        order as vsr_iteration."""
+        probs = _bag()
+        vm = jpcg_solve_batched(probs, tol=1e-12, maxiter=400,
+                                scheme=scheme, **BK)
+        ph = jpcg_solve_batched(probs, tol=1e-12, maxiter=400,
+                                scheme=scheme, engine="phases", **BK)
+        for v, p in zip(vm, ph):
+            assert v.iterations == p.iterations
+            assert v.rr == p.rr
+            assert np.array_equal(np.asarray(v.x), np.asarray(p.x))
+            assert v.converged == p.converged
+
+    def test_per_lane_on_the_fly_termination(self):
+        """Lanes terminate at their own tolerance mid-batch; traces are
+        bit-equal to the phases engine and stop at each lane's count."""
+        easy = tridiagonal_spd(256, off=-0.1)
+        hard = tridiagonal_spd(256)
+        vm = jpcg_solve_batched([easy, hard], tol=1e-12, maxiter=1000,
+                                with_trace=True, **BK)
+        ph = jpcg_solve_batched([easy, hard], tol=1e-12, maxiter=1000,
+                                with_trace=True, engine="phases", **BK)
+        assert vm[0].iterations < vm[1].iterations
+        for v, p in zip(vm, ph):
+            assert v.iterations == p.iterations
+            assert np.array_equal(v.residual_trace, p.residual_trace)
+        assert vm[0].residual_trace.shape[0] == vm[0].iterations
+        assert vm[0].residual_trace[-1] <= 1e-12
+
+    def test_policies_produce_identical_iterates(self):
+        """paper vs min-traffic schedules differ only in HBM traffic, not
+        arithmetic: the VM produces bit-equal lanes under both."""
+        probs = _bag()
+        a = jpcg_solve_batched(probs, tol=1e-12, maxiter=2000,
+                               policy="paper", **BK)
+        b = jpcg_solve_batched(probs, tol=1e-12, maxiter=2000,
+                               policy="min_traffic", **BK)
+        for ra, rb in zip(a, b):
+            assert ra.iterations == rb.iterations
+            assert np.array_equal(np.asarray(ra.x), np.asarray(rb.x))
+
+    def test_vm_matches_single_system_loop(self):
+        """Against jpcg_loop (single-system, jnp.dot reductions): same
+        solution to scheme tolerance, iteration counts within ±1 — the
+        only daylight is dot-reduction order inside XLA."""
+        a = poisson_2d(24)
+        prog = canonical_program("min_traffic")
+        out = vm_solve(a, program=prog, tol=1e-12, maxiter=3000,
+                       block_rows=64, col_tile=128)
+        ref = jpcg_solve(a, tol=1e-12, maxiter=3000, block_rows=64,
+                         col_tile=128)
+        assert abs(out["iterations"] - ref.iterations) <= 1
+        np.testing.assert_allclose(np.asarray(out["x"]),
+                                   np.asarray(ref.x), rtol=1e-8, atol=1e-10)
+
+    def test_plain_cg_program_on_unit_diag_system(self):
+        """Plain CG ≡ JPCG when M = I: the compiled plain-CG program must
+        bit-match the phases engine on a unit-diagonal system (division
+        by exactly 1.0 is lossless)."""
+        a = csr_to_dense(poisson_2d(12)) / 4.0      # poisson diag is 4
+        prog = compile_policy("min_traffic", PLAIN_CG_MODULES).program
+        out = vm_solve(a, program=prog, tol=1e-12, maxiter=2000, **BK)
+        ref = jpcg_solve_batched([a], tol=1e-12, maxiter=2000,
+                                 engine="phases", **BK)[0]
+        assert out["iterations"] == ref.iterations
+        assert np.array_equal(np.asarray(out["x"]), np.asarray(ref.x))
+
+
+# -------------------------------------------------- compile-cache keying
+@pytest.mark.vm
+class TestNoRetrace:
+    def test_one_executable_runs_both_policies(self):
+        """Acceptance lock: the VM executable is keyed on (bucket,
+        backend, scheme) — NOT the program.  Running a second policy adds
+        neither a cache entry nor a jit trace."""
+        batch_cache_clear()
+        probs = _bag()
+        jpcg_solve_batched(probs, tol=1e-12, maxiter=500,
+                           policy="paper", **BK)
+        info1, stats1 = batch_cache_info(), vm_executable_stats()
+        assert info1["entries"] == 1 and info1["misses"] == 1
+        assert stats1 == {"executables": 1, "traces": 1}
+        jpcg_solve_batched(probs, tol=1e-12, maxiter=500,
+                           policy="min_traffic", **BK)
+        info2, stats2 = batch_cache_info(), vm_executable_stats()
+        assert info2["entries"] == 1                   # same executable
+        assert info2["hits"] == info1["hits"] + 1
+        assert stats2 == {"executables": 1, "traces": 1}  # no retrace
+
+    def test_scheme_change_costs_one_executable(self):
+        batch_cache_clear()
+        probs = [poisson_2d(12), tridiagonal_spd(200)]
+        jpcg_solve_batched(probs, tol=1e-12, maxiter=300, scheme="mixed_v3",
+                           **BK)
+        jpcg_solve_batched(probs, tol=1e-12, maxiter=300, scheme="fp64",
+                           **BK)
+        assert vm_executable_stats() == {"executables": 2, "traces": 2}

@@ -82,21 +82,26 @@ def test_nop_padding_preserves_semantics():
 
 
 def test_program_is_operand_not_trace_constant():
-    """Same padded length ⇒ one compiled executable for both programs."""
-    from repro.core.vm import _vm_run
+    """Same padded length ⇒ one compiled executable for both programs.
+
+    The VM executable is cached per bucket (``vm_executable_stats``
+    counts jit trace entries across all cached VM runners/steppers);
+    swapping the program operand must not add a trace.
+    """
+    from repro.core.vm import vm_executable_stats
     a = tridiagonal_spd(256)
     p1, _ = assemble_jpcg("paper")
     p2, _ = assemble_jpcg("min_traffic")
     L = max(p1.shape[0], p2.shape[0])
-    n_before = _vm_run._cache_size()
+    n_before = vm_executable_stats()["traces"]
     vm_solve(a, program=pad_program(p1, L), tol=1e-12, maxiter=100,
              block_rows=64, col_tile=128)
-    n_mid = _vm_run._cache_size()
+    n_mid = vm_executable_stats()["traces"]
     vm_solve(a, program=pad_program(p2, L), tol=1e-12, maxiter=100,
              block_rows=64, col_tile=128)
-    n_after = _vm_run._cache_size()
+    n_after = vm_executable_stats()["traces"]
     assert n_mid == n_before + 1
-    assert n_after == n_mid              # second program: cache HIT
+    assert n_after == n_mid              # second program: no retrace
 
 
 def test_pad_program_rejects_truncation():
