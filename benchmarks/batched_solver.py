@@ -1,25 +1,35 @@
 """Batched multi-system solver throughput + stream-VM dispatch overhead.
 
-Three ways to solve the same bag of heterogeneous SPD systems:
+Four ways to solve the same bag of heterogeneous SPD systems:
 
 * ``python_loop`` — one-by-one through ``jpcg_solve`` (one compiled loop
   per padded bucket, dispatched serially from Python);
 * ``batched_phases`` — all systems in ONE compiled ``lax.while_loop``
   through the phase-fused engine (``engine="phases"``, the oracle);
-* ``batched_vm`` — the same batch through the stream VM executing the
-  compiled paper-policy program (``engine="vm"``, the production path).
+* ``batched_vm`` — the same batch through the *generic* stream VM: the
+  program is a traced operand dispatched word-at-a-time by
+  ``lax.switch`` (``engine="vm", specialize=False``, the fallback path);
+* ``batched_vm_spec`` — the *specialized* stream VM: the compiled
+  paper-policy program unrolled into the executable at trace time
+  (``engine="vm"``, the production default).
 
 Reading the numbers: on a *serial CPU host* the loop generally wins —
 every padded FLOP executes sequentially and the batch runs until its
 slowest lane converges; the CPU batched/loop ratio is the padding +
 convergence-sync overhead this benchmark tracks, and the throughput win
 appears on SIMD hardware (TPU) where extra lanes occupy otherwise-idle
-vector lanes.  ``vm_overhead`` (t_vm / t_phases) is the new number this
-section collects: the cost of instruction-at-a-time ``lax.switch``
-dispatch relative to the phase-fused loop for the *same arithmetic* —
-the VM's results are bit-identical, so any gap is pure dispatch.
+vector lanes.  ``vm_overhead`` (t_vm / t_phases) is the dispatch cost of
+each VM path relative to the phase-fused loop for the *same arithmetic*
+— both VM paths are bit-identical to phases, so any gap is pure
+dispatch.  ``spec_speedup`` (t_generic_vm / t_spec_vm) is what
+trace-time program specialization buys.  The production path's
+``vm_overhead`` (the ``batched_vm_spec`` row) is the guarded headline:
+``benchmarks/run.py --smoke`` exits nonzero when it exceeds
+:data:`VM_OVERHEAD_MAX` (see :func:`check_vm_overhead`), so the
+dispatch gap cannot silently regress in CI.
 
-``python -m benchmarks.batched_solver [--repeat-suite N] [--smoke]``
+``python -m benchmarks.batched_solver [--repeat-suite N] [--smoke]
+[--overhead-threshold X]``
 """
 from __future__ import annotations
 
@@ -34,9 +44,15 @@ from repro.core.cg import jpcg_solve
 from repro.sparse import diag_dominant_spd, poisson_2d, tridiagonal_spd
 
 HEADER = ["mode", "systems", "total_iters", "time_s", "systems_per_s",
-          "speedup", "vm_overhead"]
+          "speedup", "vm_overhead", "spec_speedup"]
 
 BK = dict(block_rows=8, col_tile=128)
+
+#: CI regression guard: the production (specialized) VM path may cost at
+#: most this factor over the phase-fused oracle before the smoke lane
+#: fails.  The steady-state target is ≤ 1.05; the guard leaves headroom
+#: for noisy CI runners.
+VM_OVERHEAD_MAX = 1.25
 
 
 def _bag(copies: int = 1, smoke: bool = False):
@@ -65,42 +81,63 @@ def _timed(fn, *args, **kw):
     return out, time.perf_counter() - t0
 
 
+def check_vm_overhead(rows, threshold: float = VM_OVERHEAD_MAX):
+    """Raise ``SystemExit`` (nonzero) if the production VM path's
+    dispatch overhead exceeds ``threshold`` — the CI regression guard."""
+    spec = next(r for r in rows if r["mode"] == "batched_vm_spec")
+    if spec["vm_overhead"] > threshold:
+        raise SystemExit(
+            f"stream-VM dispatch regression: specialized vm_overhead "
+            f"{spec['vm_overhead']} > {threshold} (t_spec/t_phases); "
+            "the program-specialized path must stay fused — see "
+            "ARCHITECTURE.md §specialization")
+
+
 def run(repeat_suite: int = 1, smoke: bool = False):
     jax.config.update("jax_enable_x64", True)
     probs = _bag(repeat_suite, smoke=smoke)
     kw = dict(tol=1e-12, maxiter=1000 if smoke else 4000)
 
-    # warm-up all three paths (compile), then time
+    # warm-up all four paths (compile), then time
     for a in probs:
         jpcg_solve(a, **kw, **BK)
     jpcg_solve_batched(probs, **kw, engine="phases", **BK)
+    jpcg_solve_batched(probs, **kw, engine="vm", specialize=False, **BK)
     jpcg_solve_batched(probs, **kw, engine="vm", **BK)
 
     singles, t_loop = _timed(
         lambda: [jpcg_solve(a, **kw, **BK) for a in probs])
     phases, t_phases = _timed(
         jpcg_solve_batched, probs, **kw, engine="phases", **BK)
-    vm, t_vm = _timed(jpcg_solve_batched, probs, **kw, engine="vm", **BK)
+    vm, t_vm = _timed(jpcg_solve_batched, probs, **kw, engine="vm",
+                      specialize=False, **BK)
+    spec, t_spec = _timed(jpcg_solve_batched, probs, **kw, engine="vm",
+                          **BK)
 
-    for s, p, v in zip(singles, phases, vm):
+    for s, p, v, sp in zip(singles, phases, vm, spec):
         assert abs(s.iterations - p.iterations) <= 1, "parity violated"
-        assert v.iterations == p.iterations, "VM/phases parity violated"
-        assert np.array_equal(np.asarray(v.x), np.asarray(p.x)), \
-            "VM not bit-identical to phases engine"
+        for r, label in ((v, "generic VM"), (sp, "specialized VM")):
+            assert r.iterations == p.iterations, f"{label}/phases parity"
+            assert np.array_equal(np.asarray(r.x), np.asarray(p.x)), \
+                f"{label} not bit-identical to phases engine"
 
-    def row(mode, res, t, vm_overhead=""):
+    def row(mode, res, t, vm_overhead="", spec_speedup=""):
         return {"mode": mode, "systems": len(probs),
                 "total_iters": sum(r.iterations for r in res),
                 "time_s": round(t, 4),
                 "systems_per_s": round(len(probs) / t, 2),
                 "speedup": round(t_loop / t, 2),
-                "vm_overhead": vm_overhead}
+                "vm_overhead": vm_overhead,
+                "spec_speedup": spec_speedup}
 
     rows = [
         row("python_loop", singles, t_loop),
         row("batched_phases", phases, t_phases),
         row("batched_vm", vm, t_vm,
             vm_overhead=round(t_vm / t_phases, 2)),
+        row("batched_vm_spec", spec, t_spec,
+            vm_overhead=round(t_spec / t_phases, 2),
+            spec_speedup=round(t_vm / t_spec, 2)),
     ]
     emit(rows, HEADER)
     print(f"# batch compile cache: {batch_cache_info()}")
@@ -112,4 +149,11 @@ if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--repeat-suite", type=int, default=1)
     ap.add_argument("--smoke", action="store_true")
-    run(**vars(ap.parse_args()))
+    ap.add_argument("--overhead-threshold", type=float, default=None,
+                    help="fail (exit nonzero) if the specialized path's "
+                         "vm_overhead exceeds this (CI uses "
+                         f"{VM_OVERHEAD_MAX})")
+    args = ap.parse_args()
+    out = run(repeat_suite=args.repeat_suite, smoke=args.smoke)
+    if args.overhead_threshold is not None:
+        check_vm_overhead(out, args.overhead_threshold)

@@ -11,6 +11,11 @@ JSON files as artifacts.
 ``--smoke`` runs the fast, always-on subset (VSR accounting + the
 batched-solver throughput/VM-overhead section with a reduced bag): a
 quick signal that the numbers still materialize, not a rigorous timing.
+The smoke lane doubles as the stream-VM dispatch regression guard: after
+the JSON is written it exits nonzero if the specialized VM path's
+``vm_overhead`` exceeds ``benchmarks.batched_solver.VM_OVERHEAD_MAX``
+(1.25) — the ISSUE-6 gap (generic dispatch at 1.18×) must not creep
+back into the production path.
 """
 from __future__ import annotations
 
@@ -59,6 +64,7 @@ def main(argv=None):
         keep = {"vsr_access_counts", "batched_solver"}
         sections = [s for s in sections if s[0] in keep]
 
+    failures = []
     for name, title, fn, kw in sections:
         print(f"\n=== {title} ===")
         t0 = time.time()
@@ -69,6 +75,18 @@ def main(argv=None):
                              meta={"tier": args.tier, "smoke": args.smoke,
                                    "elapsed_s": round(elapsed, 2)})
         print(f"--- ({elapsed:.1f}s)")
+        if name == "batched_solver" and args.smoke:
+            # Regression guard (after the JSON is persisted, so a failing
+            # run still uploads its numbers as a CI artifact).
+            try:
+                batched_solver.check_vm_overhead(rows)
+            except SystemExit as e:
+                failures.append(str(e))
+
+    if failures:
+        for f in failures:
+            print(f"FAIL: {f}")
+        raise SystemExit(1)
 
 
 if __name__ == "__main__":

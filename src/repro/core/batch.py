@@ -10,9 +10,13 @@ one ``lax.while_loop`` through one of two engines:
   (:mod:`repro.core.vm`) executing a compiled stream-ISA program
   (:func:`repro.core.compile.compile_policy`); ``policy=`` picks the VSR
   schedule ("paper" | "min_traffic") and ``program=`` injects any custom
-  program.  The VM executable is cached per (bucket shape, backend,
-  scheme) — **never** per program/policy — so swapping schedules never
-  recompiles (the paper's one-bitstream-serves-any-schedule goal).
+  program.  By default the program is *specialized* into the executable
+  at trace time (straight-line ops, cached per (bucket, backend, scheme,
+  program bytes) — the fast path); ``specialize=False`` keeps the
+  program a traced operand so the executable is cached per (bucket
+  shape, backend, scheme) — **never** per program/policy — and swapping
+  schedules never recompiles (the paper's
+  one-bitstream-serves-any-schedule goal, kept where it matters).
 * ``engine="phases"`` — the phase-fused loop
   (:func:`repro.core.phases.vsr_iteration`, literally the single-system
   iteration code), kept as the bit-exact oracle the VM is tested against.
@@ -292,6 +296,7 @@ def jpcg_solve_batched(problems: Sequence, bs: Optional[Sequence] = None,
                        scheme="mixed_v3", backend: str = "xla",
                        engine: str = "vm", policy: Optional[str] = None,
                        program: Optional[np.ndarray] = None,
+                       specialize: bool = True,
                        block_rows: int = 256, col_tile: int = 512,
                        bucket: bool = True, with_trace: bool = False,
                        interpret: Optional[bool] = None) -> List[CGResult]:
@@ -301,9 +306,13 @@ def jpcg_solve_batched(problems: Sequence, bs: Optional[Sequence] = None,
     ``engine``/``policy``/``program`` knobs (default: the batched stream
     VM running the compiled paper-policy program; ``policy``/``program``
     only make sense with ``engine="vm"`` and are rejected otherwise —
-    the phases engine hard-codes its schedule).  Lanes terminate on the
-    fly at their own ``‖r‖² ≤ tol_g``; the compiled loop runs until
-    every lane converged or ``maxiter``.
+    the phases engine hard-codes its schedule).  ``specialize`` (default
+    True) unrolls the program into the executable at trace time — the
+    fast straight-line path, cached per program bytes;
+    ``specialize=False`` keeps the program a traced operand so one
+    executable serves every program of the same padded length.  Lanes
+    terminate on the fly at their own ``‖r‖² ≤ tol_g``; the compiled
+    loop runs until every lane converged or ``maxiter``.
     """
     if engine != "vm" and (policy is not None or program is not None):
         raise ValueError(
@@ -375,11 +384,14 @@ def jpcg_solve_batched(problems: Sequence, bs: Optional[Sequence] = None,
         tol_vec = jnp.asarray(np.asarray(tol, np.float64), vd)
 
     if engine == "vm":
-        # The VM executable is keyed on the bucket — NOT on the program
-        # or policy; the program is a runtime operand (program *length*
-        # participates only through the operand's shape).
+        # Specialized (default): the program is unrolled into the
+        # executable, so its bytes join the cache key (via program_token)
+        # — word-identical programs share one executable.  Generic
+        # fallback: the executable is keyed on the bucket — NOT on the
+        # program or policy; the program is a runtime operand (program
+        # *length* participates only through the operand's shape).
         from repro.core.compile import canonical_program
-        from repro.core.isa import BUF, SREG
+        from repro.core.isa import BUF, SREG, program_token
         from repro.core.vm import make_vm_runner
         if program is None:
             policy = "paper" if policy is None else policy
@@ -387,16 +399,27 @@ def jpcg_solve_batched(problems: Sequence, bs: Optional[Sequence] = None,
             method = f"vm_batched[{policy}]"
         else:
             method = "vm_batched[custom]"
-        key = ("vm_solve", backend, scheme.name, G, bucket_dims,
-               block_rows, col_tile, stacked.n_col_tiles, maxiter,
-               with_trace, interpret)
-        run = _cached(key, lambda: make_vm_runner(
+        if not specialize:
+            method += "|generic"
+        prog_np = np.asarray(program, np.int32)
+        runner_kw = dict(
             backend=backend, scheme=scheme, maxiter=maxiter,
             with_trace=with_trace, block_rows=block_rows,
             col_tile=col_tile, n_col_tiles=stacked.n_col_tiles,
-            n_row_blocks=n_row_blocks, interpret=interpret))
-        st = run(jnp.asarray(np.asarray(program, np.int32)), mat, diag, b,
-                 x0, tol_vec)
+            n_row_blocks=n_row_blocks, interpret=interpret)
+        if specialize:
+            key = ("vm_solve_spec", backend, scheme.name, G, bucket_dims,
+                   block_rows, col_tile, stacked.n_col_tiles, maxiter,
+                   with_trace, interpret, program_token(prog_np))
+            run = _cached(key, lambda: make_vm_runner(program=prog_np,
+                                                      **runner_kw))
+            st = run(mat, diag, b, x0, tol_vec)
+        else:
+            key = ("vm_solve", backend, scheme.name, G, bucket_dims,
+                   block_rows, col_tile, stacked.n_col_tiles, maxiter,
+                   with_trace, interpret)
+            run = _cached(key, lambda: make_vm_runner(**runner_kw))
+            st = run(jnp.asarray(prog_np), mat, diag, b, x0, tol_vec)
         xs = st.mem[BUF["x"]]
         rrs_dev, trace_dev = st.sregs[SREG["rr"]], st.trace
     elif engine == "phases":

@@ -52,7 +52,8 @@ from typing import Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 from repro.core.isa import (BUF, ITYPE_COMP, ITYPE_CTRL, ITYPE_VCTRL, MOD,
-                            SREG, CTRL_ALPHA, CTRL_BETA, Instr, pad_program)
+                            SREG, CTRL_ALPHA, CTRL_BETA, Instr, pad_program,
+                            program_token)
 from repro.core.vsr import (JPCG_MODULES, LOOP_CARRIED, Module, VSRSchedule,
                             schedule)
 
@@ -308,6 +309,19 @@ class CompiledProgram:
     @property
     def length(self) -> int:
         return int(self.program.shape[0])
+
+    @property
+    def cache_token(self) -> str:
+        """Stable content hash of the (unpadded) program words.
+
+        The specialized VM path keys its executables on
+        ``(bucket, backend, scheme, chunk, program bytes)`` — this token
+        is the last component.  Note the *padded* words are what actually
+        run; :func:`repro.core.isa.program_token` of the padded array is
+        what the runner/stepper caches use, and two ``CompiledProgram``\\ s
+        with equal ``cache_token`` pad to equal bytes.
+        """
+        return program_token(self.program)
 
     def padded(self, length: int) -> np.ndarray:
         """NOP-pad to ``length`` (programs of one length share one VM)."""

@@ -46,7 +46,7 @@ import numpy as np
 __all__ = [
     "ITYPE_VCTRL", "ITYPE_COMP", "ITYPE_CTRL", "ITYPE_NOP",
     "MOD", "BUF", "SREG", "Instr", "assemble_jpcg", "derived_mem_instructions",
-    "decode_program", "program_text", "pad_program",
+    "decode_program", "program_text", "pad_program", "program_token",
 ]
 
 ITYPE_VCTRL, ITYPE_COMP, ITYPE_CTRL, ITYPE_NOP = 0, 1, 2, 3
@@ -193,6 +193,21 @@ def program_text(program: np.ndarray) -> str:
             op = "nop"
         lines.append(f"{pc:3d}  {op}")
     return "\n".join(lines)
+
+
+def program_token(program: np.ndarray) -> str:
+    """Stable content hash of an ``int32[P, 8]`` program word array.
+
+    Two programs share a token iff they are word-identical (NOP padding
+    included — the padded words are the bytes that run).  This is the
+    cache-key component of the *specialized* VM path
+    (:func:`repro.core.vm.make_vm_runner` with ``program=``): program
+    bytes participate in executable identity only there, never on the
+    generic traced-operand path.
+    """
+    import hashlib
+    words = np.ascontiguousarray(np.asarray(program, dtype=np.int32))
+    return hashlib.sha1(words.tobytes()).hexdigest()[:16]
 
 
 def pad_program(program: np.ndarray, length: int) -> np.ndarray:

@@ -11,39 +11,63 @@ directly — this is the *single solver backend*; the phase-fused loop in
 * **queues** — the inter-module FIFOs, ``[8, G, n]``; a queue register
   holds one logical vector in flight per lane (fan-out is free, like the
   paper's VecCtrl element duplication);
-* **computation modules** M1–M8 dispatched by ``lax.switch`` — M1 routes
-  through the same batched SpMV closures as the phase engine
+* **computation modules** M1–M8 — M1 routes through the same batched
+  SpMV closures as the phase engine
   (:func:`repro.core.batch._matvec_factory`: XLA flat-stream or Pallas
   ELLPACK), M2/M6/M8 are row-wise dot modules writing ``[G]`` scalar
   registers, M3/M4/M7 the axpy family, M5 the Jacobi left-divide;
 * **global controller** — an outer ``lax.while_loop`` that runs the
   program once per iteration and terminates each lane on the fly at its
-  own ``rr_g ≤ τ_g`` (paper Challenge 1, batched): every state write is
-  gated on the lane's ``active`` flag exactly like
-  :func:`repro.core.batch._batched_body`, so a converged lane's buffers
-  freeze mid-batch while the survivors keep iterating.
+  own ``rr_g ≤ τ_g`` (paper Challenge 1, batched): every state write —
+  ``mem``, ``sregs``, **and** ``queues`` — is gated on the lane's
+  ``active`` flag exactly like :func:`repro.core.batch._batched_body`,
+  so a converged lane's *entire* VM state freezes mid-batch while the
+  survivors keep iterating.
 
-The program is a *traced operand*: one compiled VM executable (cached per
-(bucket shape, backend, precision scheme) — plus the chunk size for the
-serving stepper — in the batch compile cache; the key deliberately
-excludes the program) runs paper-policy,
-min-traffic, plain-CG, or any other program of the same padded length
-with **no retrace** — the JAX analogue of not re-running synthesis/
-place/route per problem.  ``tests/test_compile.py`` asserts bit-level
-agreement with the phase engine and trace-count invariance across
-programs; the front doors are :func:`repro.core.batch.jpcg_solve_batched`
-(``engine="vm"``, the default) and :class:`repro.serve.SolverEngine`.
+Two execution paths share the VM's semantics:
+
+* **specialized** (the production default) — when the program is a
+  concrete ``np.ndarray`` at Python time (it always is for the front
+  doors: :func:`repro.core.batch.jpcg_solve_batched` and
+  :class:`repro.serve.SolverEngine` both obtain it from
+  :func:`repro.core.compile.canonical_program`), the program is unrolled
+  at *trace time* into straight-line jnp ops with static buffer/queue
+  indices: no ``lax.switch``, no per-word ``lax.cond``, no dynamic
+  gather/scatter over monolithic state.  The ``[8, G, n]`` queue file is
+  decomposed into per-queue ``[G, n]`` arrays and the ``[6, G, n]``
+  memory file into per-buffer arrays, so only state the program actually
+  touches enters the loop-carried dataflow and XLA fuses a whole
+  iteration the way :func:`repro.core.phases.vsr_iteration` fuses — the
+  JAX analogue of the FPGA paying dispatch once at synthesis.
+  Executables are cached per
+  ``(bucket, backend, scheme, maxiter/chunk, program bytes)``
+  (:func:`repro.core.isa.program_token`): word-identical programs share
+  one executable, a different schedule costs one specialization.
+* **generic** (``specialize=False``, the fallback) — the program is a
+  *traced operand* dispatched word-at-a-time by ``lax.switch``; one
+  compiled executable (cached per bucket/backend/scheme, the key
+  deliberately excludes the program) runs paper-policy, min-traffic,
+  plain-CG, or any other program of the same padded length with **no
+  retrace** — the analogue of not re-running synthesis/place/route per
+  problem.  Prefer it when programs are generated at runtime faster
+  than they can be specialized (schedule search, fuzzing).
+
+``tests/test_compile.py`` asserts bit-level agreement of both paths with
+the phase engine and the cache economics of each; the front doors are
+:func:`repro.core.batch.jpcg_solve_batched` (``engine="vm"``) and
+:class:`repro.serve.SolverEngine`.
 """
 from __future__ import annotations
 
-from typing import NamedTuple, Optional
+from typing import List, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core.batch import _cached, _matvec_factory, _row_dot
-from repro.core.isa import BUF, SREG
+from repro.core.isa import (BUF, CTRL_ALPHA, ITYPE_COMP, ITYPE_CTRL,
+                            ITYPE_VCTRL, SREG, program_token)
 from repro.core.precision import get_scheme
 
 __all__ = ["BatchedVMState", "make_vm_runner", "make_vm_stepper",
@@ -51,6 +75,11 @@ __all__ = ["BatchedVMState", "make_vm_runner", "make_vm_stepper",
 
 _N_QUEUES = 8
 _N_SREGS = 6
+_N_BUFS = 6
+
+#: COMP module id -> executor branch (0=spmv, 1=dot, 2=axpy, 3=div); the
+#: VM's branch table is fixed, like the FPGA's module array.
+_BRANCH_OF_MOD = (0, 1, 2, 2, 3, 1, 2, 1)
 
 
 class BatchedVMState(NamedTuple):
@@ -65,6 +94,26 @@ class BatchedVMState(NamedTuple):
     trace: jax.Array     # [G, maxiter] rr per iteration, or [G, 0]
 
 
+def _masked_trace(trace, k, keep, rr_new):
+    """Record ``rr`` at column ``k`` for live lanes, or nothing at all
+    when ``k`` is past the trace width.
+
+    A with-trace state continued through :func:`make_vm_stepper` beyond
+    its trace width drives ``k`` out of range.  The unguarded write only
+    stayed a no-op because JAX silently *drops* out-of-bounds scatter
+    updates (while the ``trace[:, k]`` gather feeding it clamps) —
+    implicit semantics the solver must not lean on; the guard makes the
+    out-of-range no-op explicit.
+    """
+    width = trace.shape[1]
+    if not width:
+        return trace
+    safe_k = jnp.minimum(k, width - 1)
+    ok = keep & (k < width)
+    return trace.at[:, safe_k].set(jnp.where(ok, rr_new, trace[:, safe_k]))
+
+
+# ------------------------------------------------------------ generic path
 def _make_executor(matvec):
     """Per-instruction executor closed over the batched SpMV closure."""
 
@@ -100,7 +149,7 @@ def _make_executor(matvec):
         def div():       # M5: dst = a / b  (Jacobi left-divide)
             return st.queues.at[qd].set(a / bq), st.sregs
 
-        branch = jnp.array([0, 1, 2, 2, 3, 1, 2, 1], jnp.int32)[mod]
+        branch = jnp.array(_BRANCH_OF_MOD, jnp.int32)[mod]
         q, sregs = jax.lax.switch(branch, [spmv, dot, axpy, div])
         return st._replace(queues=q, sregs=sregs)
 
@@ -151,9 +200,11 @@ def _vm_body(program, matvec, tol, maxiter_vec=None):
     """One VM tick = run the program once = one JPCG iteration per lane.
 
     Frozen (converged) lanes flow through the arithmetic — dead compute
-    on a SIMD device — but ``mem``/``sregs`` writes are gated on
-    ``active``, mirroring the masking semantics of
-    :func:`repro.core.batch._batched_body` bit for bit.
+    on a SIMD device — but ``mem``/``sregs``/``queues`` writes are gated
+    on ``active``, mirroring the masking semantics of
+    :func:`repro.core.batch._batched_body` bit for bit.  (Queues included:
+    a frozen lane's streams must not drift, or continuing a state through
+    the serving stepper / bucket growth becomes nondeterministic.)
     """
     execute = _make_executor(matvec)
 
@@ -164,32 +215,188 @@ def _vm_body(program, matvec, tol, maxiter_vec=None):
         nxt = jax.lax.fori_loop(0, program.shape[0], step, st)
         keep = st.active
         mem = jnp.where(keep[None, :, None], nxt.mem, st.mem)
+        queues = jnp.where(keep[None, :, None], nxt.queues, st.queues)
         sregs = jnp.where(keep[None, :], nxt.sregs, st.sregs)
         it = st.it + keep.astype(jnp.int32)
         rr = sregs[SREG["rr"]]
-        if st.trace.shape[1]:
-            trace = st.trace.at[:, st.k].set(
-                jnp.where(keep, nxt.sregs[SREG["rr"]], st.trace[:, st.k]))
-        else:
-            trace = st.trace
+        trace = _masked_trace(st.trace, st.k, keep, nxt.sregs[SREG["rr"]])
         active = keep & (rr > tol)
         if maxiter_vec is not None:
             active = active & (it < maxiter_vec)
         return BatchedVMState(k=st.k + 1, it=it, mem=mem,
-                              queues=nxt.queues, sregs=sregs,
+                              queues=queues, sregs=sregs,
                               active=active, trace=trace)
+
+    return body
+
+
+# -------------------------------------------------------- specialized path
+class _ProgramPlan(NamedTuple):
+    """Trace-time analysis of a concrete program."""
+
+    ops: Tuple[Tuple[int, ...], ...]   # decoded words (python ints)
+    written_bufs: Tuple[int, ...]      # HBM buffers the program stores to
+    accessed_queues: Tuple[int, ...]   # queues read or written (sorted)
+    written_queues: Tuple[int, ...]    # queues written (subset of accessed)
+
+
+def _analyze_program(program: np.ndarray) -> _ProgramPlan:
+    """Decode a concrete program and compute the state it touches.
+
+    Only touched buffers/queues enter the specialized loop's carried
+    dataflow; untouched ones bypass the ``lax.while_loop`` entirely (they
+    are reattached from the initial state afterwards).
+    """
+    ops = tuple(tuple(int(v) for v in w)
+                for w in np.asarray(program, np.int32))
+    wb, rq, wq = set(), set(), set()
+    for w in ops:
+        if w[0] == ITYPE_VCTRL:
+            if w[2]:                     # rd: mem[buf] -> queue[qd]
+                wq.add(w[6])
+            if w[3]:                     # wr: queue[qa] -> mem[buf]
+                rq.add(w[4])
+                wb.add(w[1])
+        elif w[0] == ITYPE_COMP:
+            kind = _BRANCH_OF_MOD[w[1]]
+            rq.add(w[4])                 # qa
+            if kind != 0:                # dot / axpy / div read qb too
+                rq.add(w[5])
+            if kind != 1:                # spmv / axpy / div write qd
+                wq.add(w[6])
+    return _ProgramPlan(ops=ops, written_bufs=tuple(sorted(wb)),
+                        accessed_queues=tuple(sorted(rq | wq)),
+                        written_queues=tuple(sorted(wq)))
+
+
+def _run_specialized(plan: _ProgramPlan, matvec, mem: List, queues: dict,
+                     sregs):
+    """Execute the program once, straight-line, with static indices.
+
+    ``mem`` is a list of 6 ``[G, n]`` buffers, ``queues`` a dict
+    ``{queue id: [G, n]}`` over the plan's accessed queues.  The
+    arithmetic is word-for-word the generic executor's — same ops, same
+    order, same dtypes — only the dispatch is resolved at trace time, so
+    results are bit-identical to the generic path (and hence to the
+    phases oracle).
+    """
+    mem = list(mem)
+    queues = dict(queues)
+    for w in plan.ops:
+        if w[0] == ITYPE_VCTRL:
+            buf, rd, wr, qa, qd = w[1], w[2], w[3], w[4], w[6]
+            src_m = mem[buf]             # pre-instruction snapshots: a
+            src_q = queues.get(qa)       # combined rd+wr word sees old state
+            if wr:
+                mem[buf] = src_q
+            if rd:
+                queues[qd] = src_m
+        elif w[0] == ITYPE_COMP:
+            mod, neg, qa, qb, qd, sr = w[1], w[2], w[4], w[5], w[6], w[7]
+            kind = _BRANCH_OF_MOD[mod]
+            a = queues[qa]
+            if kind == 0:                # M1: SpMV
+                queues[qd] = matvec(a)
+            elif kind == 1:              # M2/M6/M8: row-wise dot -> sreg
+                sregs = sregs.at[sr].set(_row_dot(a, queues[qb]))
+            elif kind == 2:              # M3/M4/M7: dst = a ± s·b
+                s = sregs[sr]
+                if neg:
+                    s = -s
+                queues[qd] = a + s[:, None] * queues[qb]
+            else:                        # M5: dst = a / b
+                queues[qd] = a / queues[qb]
+        elif w[0] == ITYPE_CTRL:
+            if w[1] == CTRL_ALPHA:       # α = rz / pap
+                sregs = sregs.at[SREG["alpha"]].set(
+                    sregs[SREG["rz"]] / sregs[SREG["pap"]])
+            else:                        # β = rz'/rz ; rz ← rz'
+                new = sregs.at[SREG["beta"]].set(
+                    sregs[SREG["rz_new"]] / sregs[SREG["rz"]])
+                sregs = new.at[SREG["rz"]].set(sregs[SREG["rz_new"]])
+        # NOP words vanish at trace time
+    return mem, queues, sregs
+
+
+class _SpecCarry(NamedTuple):
+    """Loop-carried state of the specialized path: per-buffer / per-queue
+    arrays instead of the monolithic files, so XLA sees straight-line
+    dataflow through exactly the state the program touches."""
+
+    k: jax.Array
+    it: jax.Array
+    mem: Tuple[jax.Array, ...]       # always all 6 buffers, [G, n] each
+    queues: Tuple[jax.Array, ...]    # accessed queues only, [G, n] each
+    sregs: jax.Array
+    active: jax.Array
+    trace: jax.Array
+
+
+def _spec_carry_of(st: BatchedVMState, plan: _ProgramPlan) -> _SpecCarry:
+    return _SpecCarry(
+        k=st.k, it=st.it, mem=tuple(st.mem[i] for i in range(_N_BUFS)),
+        queues=tuple(st.queues[q] for q in plan.accessed_queues),
+        sregs=st.sregs, active=st.active, trace=st.trace)
+
+
+def _state_of_spec_carry(c: _SpecCarry, st0: BatchedVMState,
+                         plan: _ProgramPlan) -> BatchedVMState:
+    """Reassemble a full :class:`BatchedVMState`; queues the program never
+    touches keep their incoming (``st0``) contents."""
+    queues = st0.queues
+    for q, v in zip(plan.accessed_queues, c.queues):
+        queues = queues.at[q].set(v)
+    return BatchedVMState(k=c.k, it=c.it, mem=jnp.stack(c.mem),
+                          queues=queues, sregs=c.sregs, active=c.active,
+                          trace=c.trace)
+
+
+def _spec_body(plan: _ProgramPlan, matvec, tol, maxiter_vec=None):
+    """Specialized VM tick — identical masking semantics to
+    :func:`_vm_body`, applied per touched buffer/queue."""
+    wb = frozenset(plan.written_bufs)
+    wq = frozenset(plan.written_queues)
+
+    def body(c: _SpecCarry) -> _SpecCarry:
+        q_in = dict(zip(plan.accessed_queues, c.queues))
+        n_mem, n_q, n_sregs = _run_specialized(plan, matvec, list(c.mem),
+                                               q_in, c.sregs)
+        keep = c.active
+        kv = keep[:, None]
+        mem = tuple(jnp.where(kv, n_mem[i], c.mem[i]) if i in wb
+                    else c.mem[i] for i in range(_N_BUFS))
+        queues = tuple(jnp.where(kv, n_q[q], old) if q in wq else old
+                       for q, old in zip(plan.accessed_queues, c.queues))
+        sregs = jnp.where(keep[None, :], n_sregs, c.sregs)
+        it = c.it + keep.astype(jnp.int32)
+        rr = sregs[SREG["rr"]]
+        trace = _masked_trace(c.trace, c.k, keep, n_sregs[SREG["rr"]])
+        active = keep & (rr > tol)
+        if maxiter_vec is not None:
+            active = active & (it < maxiter_vec)
+        return _SpecCarry(k=c.k + 1, it=it, mem=mem, queues=queues,
+                          sregs=sregs, active=active, trace=trace)
 
     return body
 
 
 # ------------------------------------------------------------ executables
 def make_vm_runner(*, backend, scheme, maxiter, with_trace, block_rows,
-                   col_tile, n_col_tiles, n_row_blocks, interpret=False):
+                   col_tile, n_col_tiles, n_row_blocks, interpret=False,
+                   program: Optional[np.ndarray] = None):
     """Build the jitted solve-to-completion VM runner for one bucket.
 
-    Returns ``run(program, mat, diag, b, x0, tol) -> BatchedVMState``.
-    The program is a runtime operand: callers cache this runner keyed on
+    With ``program=None`` (generic path) returns
+    ``run(program, mat, diag, b, x0, tol) -> BatchedVMState`` — the
+    program is a runtime operand and callers cache this runner keyed on
     the *bucket*, never on the program or VSR policy.
+
+    With a concrete ``program`` array the runner is *specialized*: the
+    program is unrolled at trace time and baked into the executable, the
+    signature drops the operand —
+    ``run(mat, diag, b, x0, tol) -> BatchedVMState`` — and callers must
+    key their cache on :func:`repro.core.isa.program_token` of the
+    program as well.
     """
     scheme = get_scheme(scheme)
     matvec_of = _matvec_factory(
@@ -197,70 +404,141 @@ def make_vm_runner(*, backend, scheme, maxiter, with_trace, block_rows,
         col_tile=col_tile, n_col_tiles=n_col_tiles,
         n_row_blocks=n_row_blocks, interpret=interpret)
 
+    if program is None:
+        @jax.jit
+        def run(program, mat, diag, b, x0, tol):
+            matvec = matvec_of(mat)
+            st = vm_init(matvec, diag, b, x0, maxiter=maxiter,
+                         with_trace=with_trace, tol=tol)
+            body = _vm_body(program, matvec, tol)
+
+            def cond(s):
+                return (s.k < maxiter) & jnp.any(s.active)
+
+            return jax.lax.while_loop(cond, body, st)
+
+        return run
+
+    plan = _analyze_program(program)
+
     @jax.jit
-    def run(program, mat, diag, b, x0, tol):
+    def run_spec(mat, diag, b, x0, tol):
         matvec = matvec_of(mat)
-        st = vm_init(matvec, diag, b, x0, maxiter=maxiter,
-                     with_trace=with_trace, tol=tol)
-        body = _vm_body(program, matvec, tol)
+        st0 = vm_init(matvec, diag, b, x0, maxiter=maxiter,
+                      with_trace=with_trace, tol=tol)
+        body = _spec_body(plan, matvec, tol)
 
-        def cond(s):
-            return (s.k < maxiter) & jnp.any(s.active)
+        def cond(c):
+            return (c.k < maxiter) & jnp.any(c.active)
 
-        return jax.lax.while_loop(cond, body, st)
+        c = jax.lax.while_loop(cond, body, _spec_carry_of(st0, plan))
+        return _state_of_spec_carry(c, st0, plan)
 
-    return run
+    return run_spec
 
 
 def make_vm_stepper(*, backend, scheme, block_rows, col_tile, n_col_tiles,
-                    n_row_blocks, chunk, interpret=False):
+                    n_row_blocks, chunk, interpret=False,
+                    program: Optional[np.ndarray] = None):
     """Jitted bounded VM stepper for incremental serving (SolverEngine).
 
     Runs at most ``chunk`` program executions (= iterations) from a given
     state; per-lane budgets come in as ``maxiter_vec``.  Cached in the
-    batch compile cache keyed on (backend, scheme, bucket, chunk) — NOT
-    on the program, so every policy's program reuses one executable.
-    Returns ``step(program, mat, state, tol, maxiter_vec) -> state``
-    (no separate diag operand — the preconditioner lives in ``mem[M]``).
+    batch compile cache.
+
+    * ``program=None`` — generic: cached per (backend, scheme, bucket,
+      chunk), NOT per program, so every policy's program reuses one
+      executable.  Returns
+      ``step(program, mat, state, tol, maxiter_vec) -> state``.
+    * concrete ``program`` — specialized: the program is baked in and the
+      cache key gains its :func:`~repro.core.isa.program_token`, so
+      word-identical programs share one executable and each distinct
+      schedule costs one.  Returns
+      ``step(mat, state, tol, maxiter_vec) -> state``.
+
+    (No separate diag operand on either path — the preconditioner lives
+    in ``mem[M]``.)
     """
     scheme = get_scheme(scheme)
-    key = ("vm_step", backend, scheme.name, block_rows, col_tile,
-           n_col_tiles, n_row_blocks, chunk, interpret)
+    if program is None:
+        key = ("vm_step", backend, scheme.name, block_rows, col_tile,
+               n_col_tiles, n_row_blocks, chunk, interpret)
 
-    def make():
+        def make():
+            matvec_of = _matvec_factory(
+                backend=backend, scheme=scheme, block_rows=block_rows,
+                col_tile=col_tile, n_col_tiles=n_col_tiles,
+                n_row_blocks=n_row_blocks, interpret=interpret)
+
+            @jax.jit
+            def step(program, mat, state, tol, maxiter_vec):
+                matvec = matvec_of(mat)
+                body = _vm_body(program, matvec, tol, maxiter_vec)
+                start = state.k
+
+                def cond(s):
+                    return (s.k - start < chunk) & jnp.any(s.active)
+
+                return jax.lax.while_loop(cond, body, state)
+
+            return step
+
+        return _cached(key, make)
+
+    prog = np.asarray(program, np.int32)
+    key = ("vm_step_spec", backend, scheme.name, block_rows, col_tile,
+           n_col_tiles, n_row_blocks, chunk, interpret,
+           program_token(prog))
+
+    def make_spec():
         matvec_of = _matvec_factory(
             backend=backend, scheme=scheme, block_rows=block_rows,
             col_tile=col_tile, n_col_tiles=n_col_tiles,
             n_row_blocks=n_row_blocks, interpret=interpret)
+        plan = _analyze_program(prog)
 
         @jax.jit
-        def step(program, mat, state, tol, maxiter_vec):
+        def step(mat, state, tol, maxiter_vec):
             matvec = matvec_of(mat)
-            body = _vm_body(program, matvec, tol, maxiter_vec)
+            body = _spec_body(plan, matvec, tol, maxiter_vec)
             start = state.k
 
-            def cond(s):
-                return (s.k - start < chunk) & jnp.any(s.active)
+            def cond(c):
+                return (c.k - start < chunk) & jnp.any(c.active)
 
-            return jax.lax.while_loop(cond, body, state)
+            c = jax.lax.while_loop(cond, body,
+                                   _spec_carry_of(state, plan))
+            return _state_of_spec_carry(c, state, plan)
 
         return step
 
-    return _cached(key, make)
+    return _cached(key, make_spec)
 
 
 def vm_executable_stats() -> dict:
     """VM executables in the batch compile cache + total traced shapes.
 
-    ``traces`` counts jit cache entries across all VM runners/steppers:
-    running a *different program* through an existing executable must not
-    change it (the no-retrace acceptance check); only a new bucket shape,
-    backend, scheme, or program *length* may.
+    ``specialized`` counts program-baked executables (cache keys
+    ``vm_*_spec``, one per distinct program bytes per bucket);
+    ``generic`` counts traced-operand executables (program excluded from
+    the key).  ``traces`` counts jit cache entries across all of them:
+    on the generic path, running a *different program* through an
+    existing executable must not change it (the no-retrace acceptance
+    check); only a new bucket shape, backend, scheme, or program *length*
+    may.  On the specialized path new program bytes cost one entry by
+    design.
     """
     from repro.core.batch import _CACHE
-    fns = [fn for k, fn in _CACHE.items()
-           if isinstance(k, tuple) and k and str(k[0]).startswith("vm_")]
-    return {"executables": len(fns),
+    fns, spec, gen = [], 0, 0
+    for k, fn in _CACHE.items():
+        if not (isinstance(k, tuple) and k and str(k[0]).startswith("vm_")):
+            continue
+        fns.append(fn)
+        if str(k[0]).endswith("_spec"):
+            spec += 1
+        else:
+            gen += 1
+    return {"executables": len(fns), "specialized": spec, "generic": gen,
             "traces": int(sum(f._cache_size() for f in fns))}
 
 
@@ -268,17 +546,19 @@ def vm_executable_stats() -> dict:
 def vm_solve(a, b=None, x0=None, *, program: np.ndarray, tol: float = 1e-12,
              maxiter: int = 20_000, scheme="mixed_v3",
              block_rows: int = 256, col_tile: int = 512,
-             backend: str = "xla", interpret: Optional[bool] = None) -> dict:
+             backend: str = "xla", specialize: bool = True,
+             interpret: Optional[bool] = None) -> dict:
     """Solve Ax=b by executing ``program`` on the stream VM (batch of 1).
 
     Thin wrapper over :func:`repro.core.batch.jpcg_solve_batched` with
     ``engine="vm"`` — the single-system view of the one solver backend.
+    ``specialize=False`` selects the generic traced-operand path.
     """
     from repro.core.batch import jpcg_solve_batched
     res = jpcg_solve_batched(
         [a], None if b is None else [b], None if x0 is None else [x0],
         tol=tol, maxiter=maxiter, scheme=scheme, backend=backend,
-        engine="vm", program=program, block_rows=block_rows,
-        col_tile=col_tile, interpret=interpret)[0]
+        engine="vm", program=program, specialize=specialize,
+        block_rows=block_rows, col_tile=col_tile, interpret=interpret)[0]
     return {"x": res.x, "iterations": res.iterations, "rr": res.rr,
             "converged": res.converged}

@@ -27,12 +27,32 @@ operands, so the compile-cache consequences are deliberately asymmetric:
   guarantee; ``tests/test_compile.py`` asserts the trace counter stays
   flat across policies.
 
+By default each pool steps through the *specialized* VM path — the
+pool's program is unrolled into its stepper at trace time
+(``SolverEngineConfig.specialize=False`` restores the traced-operand
+stepper, under which policies are free but dispatch is word-at-a-time).
+Under specialization a new policy costs one specialized stepper (cached
+on the program's bytes via :func:`repro.core.isa.program_token`), and
+word-identical programs still share one executable.
+
 Admission (:meth:`SolverEngine.submit`) pads the problem's banked-ELL
 arrays into a free slot of the pool's shared bucket shape and runs the
 JPCG warm-up (r₀ = b − A·x₀, z₀ = M⁻¹r₀) for that lane only.  The bucket
 is sized lazily from the pool's first admitted problem (dimensions
 rounded up to power-of-two edges, :func:`repro.sparse.stacking.bucket_up`)
 and grows — with one recompile — only when a larger problem arrives.
+
+State-preservation invariants (regression-locked in ``tests``):
+
+* **growth is lossless** — :meth:`_Pool._alloc` copies *all* in-flight
+  VM state into the grown arrays: ``mem``, ``sregs``, **and** ``queues``
+  (queues used to be silently reset to zeros, which would corrupt any
+  program relying on live streams across executions — exactly the
+  streams the compiler's live-stream preference creates);
+* **frozen lanes are frozen** — the VM masks every state write
+  (``mem``/``sregs``/``queues``) on the lane's ``active`` flag, so a
+  converged slot's state is bit-stable no matter how many ticks the
+  surviving lanes keep running.
 
 >>> eng = SolverEngine(SolverEngineConfig(batch_slots=8, block_rows=8,
 ...                                       col_tile=128))
@@ -76,6 +96,7 @@ class SolverEngineConfig:
     col_tile: int = 512
     backend: str = "xla"              # "xla" | "pallas"
     interpret: Optional[bool] = None  # pallas backend: None = auto
+    specialize: bool = True           # program-specialized steppers
 
 
 @partial(jax.jit, static_argnames=("n_rows", "padded_cols", "scheme"))
@@ -110,7 +131,8 @@ class _Pool:
         self.scheme = scheme
         self.policy = policy
         self.interpret = interpret
-        self.program = jnp.asarray(canonical_program(policy))
+        self.program_np = np.asarray(canonical_program(policy), np.int32)
+        self.program = jnp.asarray(self.program_np)
         S = cfg.batch_slots
         self.req_of_slot: list = [None] * S      # request id or None
         self.n_of_slot = np.zeros(S, np.int64)   # logical n per slot
@@ -162,15 +184,19 @@ class _Pool:
         maxiter_vec = jnp.zeros(S, jnp.int32)
 
         if old_mat is not None:
-            # Growing the bucket: copy every old lane into the new arrays.
+            # Growing the bucket: copy every old lane into the new arrays
+            # — mem, sregs AND queues (live streams must survive growth;
+            # padded tails stay zero, which is what a wider VM would hold
+            # for rows that never existed).
             def grow(new, old):
                 pads = [(0, n - o) for n, o in zip(new.shape, old.shape)]
                 return jnp.pad(old, pads)
             mat = tuple(grow(n, o) for n, o in zip(mat, old_mat))
             old_n = old_state.mem.shape[-1]
             mem = mem.at[:, :, :old_n].set(old_state.mem)
+            queues = state.queues.at[:, :, :old_n].set(old_state.queues)
             state = state._replace(
-                k=old_state.k, it=old_state.it, mem=mem,
+                k=old_state.k, it=old_state.it, mem=mem, queues=queues,
                 sregs=old_state.sregs, active=old_state.active)
             tol, maxiter_vec = self.tol, self.maxiter_vec
         self.bucket = dims
@@ -265,13 +291,19 @@ class _Pool:
 
     def step(self) -> None:
         cfg = self.cfg
-        stepper = make_vm_stepper(
+        stepper_kw = dict(
             backend=cfg.backend, scheme=self.scheme,
             block_rows=cfg.block_rows, col_tile=cfg.col_tile,
             n_col_tiles=self.bucket[-1], n_row_blocks=self.bucket[0],
             chunk=cfg.chunk_iters, interpret=self.interpret)
-        self.state = stepper(self.program, self.mat, self.state, self.tol,
-                             self.maxiter_vec)
+        if cfg.specialize:
+            stepper = make_vm_stepper(program=self.program_np, **stepper_kw)
+            self.state = stepper(self.mat, self.state, self.tol,
+                                 self.maxiter_vec)
+        else:
+            stepper = make_vm_stepper(**stepper_kw)
+            self.state = stepper(self.program, self.mat, self.state,
+                                 self.tol, self.maxiter_vec)
 
     def harvest(self) -> Dict[int, CGResult]:
         if self.state is None:
@@ -318,14 +350,38 @@ class SolverEngine:
         return self._pools[key]
 
     # ------------------------------------------------------------ public
-    @property
-    def free_slots(self) -> int:
-        """Free slots in the default (scheme, policy) pool."""
-        key = (get_scheme(self.cfg.scheme).name, self.cfg.policy)
-        pool = self._pools.get(key)
-        if pool is None:
+    def free_slots(self, pool: Optional[Tuple[Optional[str],
+                                              Optional[str]]] = None) -> int:
+        """Free solver slots across the whole engine.
+
+        With ``pool=None`` (default) sums the free slots of **every**
+        instantiated (scheme, policy) pool — per-request ``scheme=``/
+        ``policy=`` overrides create pools lazily, and admission control
+        steering on this number must see all of them.  (It used to count
+        only the default pool, so callers saw phantom fullness — slots
+        free in override pools — and phantom capacity — a full default
+        pool reported while overrides were also full.)  Before any pool
+        exists it reports ``cfg.batch_slots``, the capacity the first
+        submit will materialize.
+
+        ``pool=(scheme, policy)`` restores the single-pool view (``None``
+        components fall back to the engine defaults); an uninstantiated
+        pool reports its full capacity.
+        """
+        def pool_free(p: Optional[_Pool]) -> int:
+            if p is None:
+                return self.cfg.batch_slots
+            return sum(r is None for r in p.req_of_slot)
+
+        if pool is not None:
+            scheme, policy = pool
+            key = (get_scheme(self.cfg.scheme if scheme is None
+                              else scheme).name,
+                   self.cfg.policy if policy is None else policy)
+            return pool_free(self._pools.get(key))
+        if not self._pools:
             return self.cfg.batch_slots
-        return sum(r is None for r in pool.req_of_slot)
+        return sum(pool_free(p) for p in self._pools.values())
 
     @property
     def active_count(self) -> int:

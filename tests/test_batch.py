@@ -173,12 +173,13 @@ class TestSolverEngine:
         assert not eng.results[rid].converged
 
     def test_per_request_policy_shares_executable(self):
-        """submit(policy=) routes to a separate pool, but pools differing
-        only in policy share one jitted VM stepper — the program is an
-        operand, not part of the cache key."""
+        """submit(policy=) routes to a separate pool, but with
+        ``specialize=False`` pools differing only in policy share one
+        jitted VM stepper — the program is an operand, not part of the
+        cache key."""
         from repro.core.vm import vm_executable_stats
         eng = SolverEngine(SolverEngineConfig(batch_slots=2, chunk_iters=32,
-                                              **BK))
+                                              specialize=False, **BK))
         a = poisson_2d(16)
         r1 = eng.submit(a)                          # cfg default: paper
         eng.step()
@@ -193,6 +194,108 @@ class TestSolverEngine:
         # same arithmetic, different traffic schedule: identical results
         assert g1.iterations == g2.iterations
         np.testing.assert_array_equal(np.asarray(g1.x), np.asarray(g2.x))
+
+    def test_per_request_policy_costs_one_specialized_stepper(self):
+        """Under the default specialized path a new policy costs exactly
+        one specialized stepper (its program bytes differ) and leaves the
+        generic-executable count untouched; results are still identical
+        across policies."""
+        from repro.core.vm import vm_executable_stats
+        eng = SolverEngine(SolverEngineConfig(batch_slots=2, chunk_iters=32,
+                                              **BK))
+        a = poisson_2d(16)
+        r1 = eng.submit(a)
+        eng.step()
+        before = vm_executable_stats()
+        r2 = eng.submit(a, policy="min_traffic")
+        eng.run_to_completion()
+        after = vm_executable_stats()
+        assert after["specialized"] == before["specialized"] + 1
+        assert after["generic"] == before["generic"]
+        g1, g2 = eng.results[r1], eng.results[r2]
+        assert g1.iterations == g2.iterations
+        np.testing.assert_array_equal(np.asarray(g1.x), np.asarray(g2.x))
+
+    @pytest.mark.parametrize("specialize", [True, False])
+    def test_bucket_growth_preserves_inflight_queues(self, specialize):
+        """Regression (ISSUE 6): growing the bucket mid-flight must copy
+        the queue file like ``mem`` — it used to be silently reset to
+        zeros, corrupting any program that keeps streams live across
+        iterations.  Also checks the in-flight lane still converges to
+        the single-solver answer after growth."""
+        eng = SolverEngine(SolverEngineConfig(
+            batch_slots=2, chunk_iters=8, specialize=specialize, **BK))
+        hard = tridiagonal_spd(300)
+        r1 = eng.submit(hard)
+        eng.step()                           # 8 iterations: queues live
+        pool = eng._pool(None, None)
+        assert bool(pool.state.active[0])    # still in flight
+        q_before = np.asarray(pool.state.queues)
+        assert np.any(q_before != 0.0)
+        m_before = np.asarray(pool.state.mem)
+
+        r2 = eng.submit(poisson_2d(40))      # larger problem: bucket grows
+        old_n = q_before.shape[-1]
+        q_after = np.asarray(eng._pool(None, None).state.queues)
+        assert q_after.shape[-1] > old_n
+        # the in-flight lane's streams survived the grow (slot 0)
+        assert np.array_equal(q_after[:, 0, :old_n], q_before[:, 0])
+        assert np.all(q_after[:, 0, old_n:] == 0.0)
+        assert np.array_equal(
+            np.asarray(eng._pool(None, None).state.mem)[:, 0, :old_n],
+            m_before[:, 0])
+
+        eng.run_to_completion()
+        for rid, a in ((r1, hard), (r2, poisson_2d(40))):
+            ref = jpcg_solve(a, tol=1e-12, maxiter=20_000, **BK)
+            got = eng.results[rid]
+            assert got.converged
+            assert abs(got.iterations - ref.iterations) <= 1
+            np.testing.assert_allclose(np.asarray(got.x), np.asarray(ref.x),
+                                       rtol=1e-6, atol=1e-8)
+
+    @pytest.mark.parametrize("specialize", [True, False])
+    def test_frozen_slot_state_is_bit_stable(self, specialize):
+        """Regression (ISSUE 6): once a slot converges, its entire VM
+        state — mem, queues, sregs, it — must be bit-stable while other
+        slots keep iterating (``chunk_iters=1`` pins the check to the
+        tick right after convergence, where the unmasked queue write
+        drifted)."""
+        eng = SolverEngine(SolverEngineConfig(
+            batch_slots=2, chunk_iters=1, specialize=specialize, **BK))
+        eng.submit(tridiagonal_spd(128, off=-0.1))   # easy: freezes first
+        eng.submit(tridiagonal_spd(256))             # hard: keeps going
+        pool = eng._pool(None, None)
+        while bool(pool.state.active[0]) and bool(pool.state.active[1]):
+            eng.step()
+        frozen = 0 if not bool(pool.state.active[0]) else 1
+        assert bool(pool.state.active[1 - frozen])
+        snap = {f: np.asarray(getattr(pool.state, f))
+                for f in ("mem", "queues", "sregs", "it")}
+        eng.step()
+        assert np.array_equal(np.asarray(pool.state.mem)[:, frozen],
+                              snap["mem"][:, frozen])
+        assert np.array_equal(np.asarray(pool.state.queues)[:, frozen],
+                              snap["queues"][:, frozen])
+        assert np.array_equal(np.asarray(pool.state.sregs)[:, frozen],
+                              snap["sregs"][:, frozen])
+        assert int(pool.state.it[frozen]) == int(snap["it"][frozen])
+
+    def test_free_slots_sums_across_pools(self):
+        """free_slots() counts capacity across every instantiated pool
+        (it used to see only the default pool); ``pool=`` restores the
+        single-pool view and an uninstantiated pool reports its full
+        capacity."""
+        eng = SolverEngine(SolverEngineConfig(batch_slots=2, **BK))
+        assert eng.free_slots() == 2                 # nothing materialized
+        eng.submit(poisson_2d(8))                    # default pool
+        eng.submit(poisson_2d(8), scheme="fp64")     # second pool
+        assert eng.free_slots() == 2                 # one free in each
+        assert eng.free_slots(pool=(None, None)) == 1
+        assert eng.free_slots(pool=("fp64", None)) == 1
+        assert eng.free_slots(pool=(None, "min_traffic")) == 2
+        eng.run_to_completion()
+        assert eng.free_slots() == 4                 # both pools drained
 
     def test_per_request_scheme(self):
         """submit(scheme=) solves that request at its own precision; the

@@ -9,9 +9,12 @@ Locks the ISSUE-2 pipeline: vsr.schedule → compile → batched VM → engine.
 * bit-identity: VM lane results are bit-equal to the phase-fused batched
   engine across all faithful-tier precision schemes, with per-lane
   on-the-fly termination;
-* no-retrace: one jitted VM executable runs paper, min-traffic, and
-  plain-CG programs (compile-cache entries and jit trace counts stay
-  flat when only the program operand changes).
+* no-retrace: with ``specialize=False`` one jitted VM executable runs
+  paper, min-traffic, and plain-CG programs (compile-cache entries and
+  jit trace counts stay flat when only the program operand changes);
+* specialization (ISSUE 6): the default path unrolls the concrete
+  program into straight-line ops at trace time — bit-identical to the
+  generic VM and the phases oracle, cached per program *bytes*.
 """
 import dataclasses
 
@@ -184,28 +187,135 @@ class TestBatchedVM:
 @pytest.mark.vm
 class TestNoRetrace:
     def test_one_executable_runs_both_policies(self):
-        """Acceptance lock: the VM executable is keyed on (bucket,
+        """Acceptance lock for the generic fallback: with
+        ``specialize=False`` the VM executable is keyed on (bucket,
         backend, scheme) — NOT the program.  Running a second policy adds
         neither a cache entry nor a jit trace."""
         batch_cache_clear()
         probs = _bag()
         jpcg_solve_batched(probs, tol=1e-12, maxiter=500,
-                           policy="paper", **BK)
+                           policy="paper", specialize=False, **BK)
         info1, stats1 = batch_cache_info(), vm_executable_stats()
         assert info1["entries"] == 1 and info1["misses"] == 1
-        assert stats1 == {"executables": 1, "traces": 1}
+        assert stats1 == {"executables": 1, "specialized": 0,
+                          "generic": 1, "traces": 1}
         jpcg_solve_batched(probs, tol=1e-12, maxiter=500,
-                           policy="min_traffic", **BK)
+                           policy="min_traffic", specialize=False, **BK)
         info2, stats2 = batch_cache_info(), vm_executable_stats()
         assert info2["entries"] == 1                   # same executable
         assert info2["hits"] == info1["hits"] + 1
-        assert stats2 == {"executables": 1, "traces": 1}  # no retrace
+        assert stats2 == stats1                        # no retrace
 
     def test_scheme_change_costs_one_executable(self):
         batch_cache_clear()
         probs = [poisson_2d(12), tridiagonal_spd(200)]
         jpcg_solve_batched(probs, tol=1e-12, maxiter=300, scheme="mixed_v3",
-                           **BK)
+                           specialize=False, **BK)
         jpcg_solve_batched(probs, tol=1e-12, maxiter=300, scheme="fp64",
-                           **BK)
-        assert vm_executable_stats() == {"executables": 2, "traces": 2}
+                           specialize=False, **BK)
+        assert vm_executable_stats() == {"executables": 2, "specialized": 0,
+                                         "generic": 2, "traces": 2}
+
+
+# ------------------------------------------- program-specialized VM path
+@pytest.mark.vm
+class TestSpecializedPath:
+    """The production dispatch path (ISSUE 6): the concrete program is
+    unrolled into the executable at trace time — straight-line jnp ops,
+    no lax.switch over instruction words — and cached per program
+    *bytes* (``CompiledProgram.cache_token``)."""
+
+    @pytest.mark.parametrize("scheme", ["fp64", "mixed_v1", "mixed_v2",
+                                        "mixed_v3"])
+    def test_spec_bit_identical_to_generic_and_phases(self, scheme):
+        """Specialization may change dispatch, never arithmetic: the
+        specialized path is BIT-identical to the generic traced-operand
+        VM and to the phases oracle under every faithful-tier scheme."""
+        probs = _bag()
+        kw = dict(tol=1e-12, maxiter=400, scheme=scheme, **BK)
+        spec = jpcg_solve_batched(probs, **kw)                 # default
+        gen = jpcg_solve_batched(probs, specialize=False, **kw)
+        ph = jpcg_solve_batched(probs, engine="phases", **kw)
+        for s, g, p in zip(spec, gen, ph):
+            assert s.iterations == g.iterations == p.iterations
+            assert s.rr == g.rr == p.rr
+            assert np.array_equal(np.asarray(s.x), np.asarray(g.x))
+            assert np.array_equal(np.asarray(s.x), np.asarray(p.x))
+            assert s.converged == p.converged
+
+    def test_spec_bit_identical_on_pallas_backend(self):
+        """Same lock on the pallas kernel backend (interpret mode on
+        CPU) — small problems keep the interpreter affordable."""
+        probs = [poisson_2d(8), tridiagonal_spd(100)]
+        kw = dict(tol=1e-10, maxiter=200, backend="pallas", **BK)
+        spec = jpcg_solve_batched(probs, **kw)
+        gen = jpcg_solve_batched(probs, specialize=False, **kw)
+        for s, g in zip(spec, gen):
+            assert s.iterations == g.iterations
+            assert np.array_equal(np.asarray(s.x), np.asarray(g.x))
+
+    def test_word_identical_programs_share_one_executable(self):
+        """The specialized cache is keyed on program BYTES, not on how
+        the program was named: policy="paper" and an explicitly passed
+        canonical paper program hit the same executable."""
+        batch_cache_clear()
+        probs = _bag()
+        jpcg_solve_batched(probs, tol=1e-12, maxiter=500,
+                           policy="paper", **BK)
+        s1 = vm_executable_stats()
+        assert s1 == {"executables": 1, "specialized": 1,
+                      "generic": 0, "traces": 1}
+        jpcg_solve_batched(probs, tol=1e-12, maxiter=500,
+                           program=canonical_program("paper"), **BK)
+        assert vm_executable_stats() == s1      # byte-equal ⇒ cache hit
+        assert batch_cache_info()["hits"] >= 1
+
+    def test_new_program_words_cost_one_specialized_executable(self):
+        """Swapping policies costs one *specialized* executable (the
+        words differ even at equal padded length) while the generic
+        fallback still serves both policies from ONE executable."""
+        batch_cache_clear()
+        probs = _bag()
+        kw = dict(tol=1e-12, maxiter=500, **BK)
+        jpcg_solve_batched(probs, policy="paper", **kw)
+        jpcg_solve_batched(probs, policy="min_traffic", **kw)
+        s = vm_executable_stats()
+        assert s["specialized"] == 2 and s["generic"] == 0
+        jpcg_solve_batched(probs, policy="paper", specialize=False, **kw)
+        jpcg_solve_batched(probs, policy="min_traffic", specialize=False,
+                           **kw)
+        s2 = vm_executable_stats()
+        assert s2["generic"] == 1               # one serves both
+        assert s2["specialized"] == 2           # unchanged
+        assert s2["executables"] == 3 and s2["traces"] == 3
+
+    def test_cache_token_is_stable_across_compiles(self):
+        """CompiledProgram.cache_token depends only on the padded words:
+        recompiling the same policy yields the same token; different
+        policies yield different tokens."""
+        a = compile_policy("paper").cache_token
+        b = compile_policy("paper").cache_token
+        c = compile_policy("min_traffic").cache_token
+        assert a == b and a != c
+        # The runner/stepper caches hash the *padded* words (what runs):
+        # equal padded shape, different words ⇒ different tokens there too.
+        from repro.core.isa import program_token
+        pa = canonical_program("paper")
+        pm = canonical_program("min_traffic")
+        assert pa.shape == pm.shape
+        assert program_token(pa) != program_token(pm)
+        assert program_token(pa) == program_token(np.array(pa))
+
+    def test_executable_stats_accounting(self):
+        """vm_executable_stats splits the cache into specialized vs
+        generic entries and the totals add up."""
+        batch_cache_clear()
+        assert vm_executable_stats() == {"executables": 0, "specialized": 0,
+                                         "generic": 0, "traces": 0}
+        probs = _bag()
+        jpcg_solve_batched(probs, tol=1e-12, maxiter=300, **BK)
+        jpcg_solve_batched(probs, tol=1e-12, maxiter=300,
+                           specialize=False, **BK)
+        s = vm_executable_stats()
+        assert s["specialized"] == 1 and s["generic"] == 1
+        assert s["executables"] == s["specialized"] + s["generic"] == 2

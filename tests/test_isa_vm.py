@@ -84,9 +84,11 @@ def test_nop_padding_preserves_semantics():
 def test_program_is_operand_not_trace_constant():
     """Same padded length ⇒ one compiled executable for both programs.
 
-    The VM executable is cached per bucket (``vm_executable_stats``
-    counts jit trace entries across all cached VM runners/steppers);
-    swapping the program operand must not add a trace.
+    On the *generic* path (``specialize=False``) the VM executable is
+    cached per bucket (``vm_executable_stats`` counts jit trace entries
+    across all cached VM runners/steppers); swapping the program operand
+    must not add a trace.  (The default *specialized* path keys on
+    program bytes by design — see tests/test_compile.py.)
     """
     from repro.core.vm import vm_executable_stats
     a = tridiagonal_spd(256)
@@ -95,13 +97,138 @@ def test_program_is_operand_not_trace_constant():
     L = max(p1.shape[0], p2.shape[0])
     n_before = vm_executable_stats()["traces"]
     vm_solve(a, program=pad_program(p1, L), tol=1e-12, maxiter=100,
-             block_rows=64, col_tile=128)
+             block_rows=64, col_tile=128, specialize=False)
     n_mid = vm_executable_stats()["traces"]
     vm_solve(a, program=pad_program(p2, L), tol=1e-12, maxiter=100,
-             block_rows=64, col_tile=128)
+             block_rows=64, col_tile=128, specialize=False)
     n_after = vm_executable_stats()["traces"]
     assert n_mid == n_before + 1
     assert n_after == n_mid              # second program: no retrace
+
+
+# ------------------------------------------------ stepper state handling
+def _vm_operands(probs, tol, scheme="mixed_v3", block_rows=8, col_tile=128):
+    """Replicate jpcg_solve_batched's xla operand packing so runner /
+    stepper state handling can be tested below the batch API."""
+    import jax.numpy as jnp
+
+    from repro.core.precision import get_scheme
+    from repro.sparse.bell import csr_to_bell
+    from repro.sparse.stacking import stack_flat
+    sch = get_scheme(scheme)
+    stacked = stack_flat(
+        [csr_to_bell(a, block_rows=block_rows, col_tile=col_tile)
+         for a in probs], bucket=True)
+    mat = (jnp.asarray(stacked.gcols),
+           jnp.asarray(stacked.vals).astype(sch.matrix_dtype),
+           jnp.asarray(stacked.rows))
+    vd = sch.vector_dtype
+    G, n_pad = len(probs), stacked.padded_rows
+    diag = np.ones((G, n_pad))
+    b = np.zeros((G, n_pad))
+    for g, a in enumerate(probs):
+        n = a.shape[0]
+        diag[g, :n] = a.diagonal()
+        b[g, :n] = 1.0
+    bk = dict(backend="xla", scheme=scheme, block_rows=block_rows,
+              col_tile=col_tile, n_col_tiles=stacked.n_col_tiles,
+              n_row_blocks=stacked.n_row_blocks)
+    return (mat, jnp.asarray(diag, vd), jnp.asarray(b, vd),
+            jnp.zeros((G, n_pad), vd), jnp.full(G, tol, vd), bk)
+
+
+@pytest.mark.vm
+@pytest.mark.parametrize("specialize", [True, False])
+def test_stepper_past_trace_width_cannot_clobber_trace(specialize):
+    """Behavior lock (ISSUE 6): continuing a with-trace state through
+    the stepper beyond its trace width must leave the trace alone — and
+    the continued state must stay bit-identical to an uninterrupted run.
+    The unguarded write only survived out-of-range ticks because JAX
+    silently DROPS out-of-bounds scatter updates; the explicit guard in
+    ``_masked_trace`` pins that behavior down instead of leaning on it."""
+    import jax.numpy as jnp
+
+    from repro.core.compile import canonical_program
+    from repro.core.vm import make_vm_runner, make_vm_stepper
+    prog = canonical_program("paper")
+    W = 6
+    mat, diag, b, x0, tolv, bk = _vm_operands(
+        [tridiagonal_spd(200)], tol=1e-30)      # tiny tol: never converges
+    if specialize:
+        st = make_vm_runner(program=prog, maxiter=W, with_trace=True,
+                            **bk)(mat, diag, b, x0, tolv)
+    else:
+        st = make_vm_runner(maxiter=W, with_trace=True, **bk)(
+            jnp.asarray(prog), mat, diag, b, x0, tolv)
+    assert int(st.k) == W and st.trace.shape == (1, W)
+
+    stepper = make_vm_stepper(
+        chunk=10, program=prog if specialize else None, **bk)
+    mv = jnp.full(1, 20, jnp.int32)
+    for _ in range(2):                           # k: 6 -> 16 -> 20
+        if specialize:
+            st = stepper(mat, st, tolv, mv)
+        else:
+            st = stepper(jnp.asarray(prog), mat, st, tolv, mv)
+    assert int(st.it[0]) == 20
+
+    # An uninterrupted 20-iteration run is the oracle: the continued
+    # state must bit-match it, and the narrow trace must still hold
+    # iterations 0..W-1 (NOT the clamped overwrite of the last column).
+    ref = make_vm_runner(program=prog, maxiter=20, with_trace=True,
+                         **bk)(mat, diag, b, x0, tolv)
+    assert np.array_equal(np.asarray(st.mem), np.asarray(ref.mem))
+    assert np.array_equal(np.asarray(st.sregs), np.asarray(ref.sregs))
+    assert np.array_equal(np.asarray(st.trace),
+                          np.asarray(ref.trace[:, :W]))
+
+
+@pytest.mark.vm
+@pytest.mark.parametrize("specialize", [True, False])
+def test_frozen_lane_state_is_bit_stable_through_stepper(specialize):
+    """Regression (ISSUE 6): a converged lane's ENTIRE state — mem,
+    queues, sregs — must freeze while other lanes keep stepping.  The
+    queue file used to be written unmasked, so a frozen lane's streams
+    took one more unmasked rewrite after its final (converging) tick —
+    ``chunk=1`` pins the snapshot to that exact tick, where the drift
+    is observable."""
+    import jax.numpy as jnp
+
+    from repro.core.compile import canonical_program
+    from repro.core.vm import make_vm_runner, make_vm_stepper
+    prog = canonical_program("paper")
+    easy, hard = tridiagonal_spd(128, off=-0.1), tridiagonal_spd(256)
+    mat, diag, b, x0, tolv, bk = _vm_operands([easy, hard], tol=1e-12)
+    if specialize:
+        st = make_vm_runner(program=prog, maxiter=0, with_trace=False,
+                            **bk)(mat, diag, b, x0, tolv)
+    else:
+        st = make_vm_runner(maxiter=0, with_trace=False, **bk)(
+            jnp.asarray(prog), mat, diag, b, x0, tolv)
+    stepper = make_vm_stepper(
+        chunk=1, program=prog if specialize else None, **bk)
+    mv = jnp.full(2, 1000, jnp.int32)
+
+    def step(s):
+        if specialize:
+            return stepper(mat, s, tolv, mv)
+        return stepper(jnp.asarray(prog), mat, s, tolv, mv)
+
+    while bool(st.active[0]) and bool(st.active[1]):
+        st = step(st)
+    frozen = 0 if not bool(st.active[0]) else 1
+    assert bool(st.active[1 - frozen]), "need one live + one frozen lane"
+    snap = {f: np.asarray(getattr(st, f))
+            for f in ("mem", "queues", "sregs", "it")}
+    st2 = step(st)
+    assert int(st2.k) > int(st.k)                # the live lane advanced
+    assert np.array_equal(np.asarray(st2.mem[:, frozen]),
+                          snap["mem"][:, frozen])
+    assert np.array_equal(np.asarray(st2.queues[:, frozen]),
+                          snap["queues"][:, frozen])
+    assert np.array_equal(np.asarray(st2.sregs[:, frozen]),
+                          snap["sregs"][:, frozen])
+    assert int(st2.it[frozen]) == int(snap["it"][frozen])
 
 
 def test_pad_program_rejects_truncation():
