@@ -1,6 +1,7 @@
 """Benchmark driver — one section per paper table/figure.
 
-``python -m benchmarks.run [--tier small|large|all] [--smoke]``
+``python -m benchmarks.run [--tier small|large|all] [--smoke]
+[--profile DIR]``
 
 Every section that returns rows is also persisted as machine-readable
 ``BENCH_<name>.json`` at the repo root (see
@@ -11,11 +12,18 @@ JSON files as artifacts.
 ``--smoke`` runs the fast, always-on subset (VSR accounting + the
 batched-solver throughput/VM-overhead section with a reduced bag): a
 quick signal that the numbers still materialize, not a rigorous timing.
-The smoke lane doubles as the stream-VM dispatch regression guard: after
-the JSON is written it exits nonzero if the specialized VM path's
-``vm_overhead`` exceeds ``benchmarks.batched_solver.VM_OVERHEAD_MAX``
-(1.25) — the ISSUE-6 gap (generic dispatch at 1.18×) must not creep
-back into the production path.
+The smoke lane doubles as two regression guards on the specialized VM
+path: after the JSON is written it exits nonzero if ``vm_overhead``
+exceeds ``benchmarks.batched_solver.VM_OVERHEAD_MAX`` (1.25, the
+ISSUE-6 dispatch gap) or if ``speedup`` over ``python_loop`` drops
+below ``benchmarks.batched_solver.SPEC_SPEEDUP_MIN`` (1.5, the ISSUE-7
+batched-loop gap — both floors are recorded in the section's JSON
+``meta``).
+
+``--profile DIR`` wraps every section in a ``jax.profiler`` trace
+(``benchmarks.common.profile_trace``) written under ``DIR/<section>``
+for TensorBoard/Perfetto; profiling is strictly opt-in because it
+costs time and disk.
 """
 from __future__ import annotations
 
@@ -29,6 +37,10 @@ def main(argv=None):
                     choices=["small", "large", "all"])
     ap.add_argument("--smoke", action="store_true",
                     help="fast subset for CI; still emits BENCH_*.json")
+    ap.add_argument("--profile", metavar="DIR", default=None,
+                    help="write a jax.profiler trace per section under "
+                         "DIR/<section> (TensorBoard/Perfetto); off by "
+                         "default")
     args = ap.parse_args(argv)
 
     import jax
@@ -38,7 +50,7 @@ def main(argv=None):
                             roofline_table, spmv_kernel, tab4_solver_time,
                             tab5_throughput, tab7_iterations,
                             vsr_access_counts)
-    from benchmarks.common import write_bench_json
+    from benchmarks.common import profile_trace, write_bench_json
 
     sections = [
         ("vsr_access_counts",
@@ -68,20 +80,28 @@ def main(argv=None):
     for name, title, fn, kw in sections:
         print(f"\n=== {title} ===")
         t0 = time.time()
-        rows = fn(**kw)
+        with profile_trace(f"{args.profile}/{name}" if args.profile
+                           else None):
+            rows = fn(**kw)
         elapsed = time.time() - t0
         if rows is not None:
-            write_bench_json(name, rows,
-                             meta={"tier": args.tier, "smoke": args.smoke,
-                                   "elapsed_s": round(elapsed, 2)})
+            meta = {"tier": args.tier, "smoke": args.smoke,
+                    "elapsed_s": round(elapsed, 2)}
+            if name == "batched_solver":
+                meta["vm_overhead_max"] = batched_solver.VM_OVERHEAD_MAX
+                meta["spec_speedup_min"] = batched_solver.SPEC_SPEEDUP_MIN
+                meta["steps_per_sync"] = batched_solver.STEPS_PER_SYNC
+            write_bench_json(name, rows, meta=meta)
         print(f"--- ({elapsed:.1f}s)")
         if name == "batched_solver" and args.smoke:
-            # Regression guard (after the JSON is persisted, so a failing
-            # run still uploads its numbers as a CI artifact).
-            try:
-                batched_solver.check_vm_overhead(rows)
-            except SystemExit as e:
-                failures.append(str(e))
+            # Regression guards (after the JSON is persisted, so a
+            # failing run still uploads its numbers as a CI artifact).
+            for guard in (batched_solver.check_vm_overhead,
+                          batched_solver.check_spec_speedup):
+                try:
+                    guard(rows)
+                except SystemExit as e:
+                    failures.append(str(e))
 
     if failures:
         for f in failures:

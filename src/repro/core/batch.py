@@ -78,13 +78,13 @@ import numpy as np
 from repro.core.cg import CGResult
 from repro.core.phases import vsr_iteration
 from repro.core.precision import PrecisionScheme, get_scheme
-from repro.sparse.bell import csr_to_bell
 from repro.sparse.csr import CSRMatrix, csr_from_coo
 from repro.sparse.ellpack import csr_to_ellpack
-from repro.sparse.stacking import StackedEllpack, stack_ellpack, stack_flat
+from repro.sparse.stacking import StackedEllpack, stack_ellpack, stack_rowell
 
 __all__ = ["BatchedCGState", "jpcg_solve_batched", "batched_matvec_flat",
-           "batched_matvec_ellpack", "batch_cache_info", "batch_cache_clear"]
+           "batched_matvec_rowell", "batched_matvec_ellpack",
+           "batch_cache_info", "batch_cache_clear"]
 
 
 class BatchedCGState(NamedTuple):
@@ -117,8 +117,13 @@ def batched_matvec_flat(gcols, vals, rows, x, *, n_rows: int,
     and segment-sums into rows — value-identical to
     :func:`repro.core.operators.bell_spmv_jnp` lane by lane (same
     products in the same flattened (block, slab, slot) order), but with
-    no [B, T, col_tile] x-tile intermediate, which matters when the
-    whole batch streams every iteration.
+    no [B, T, col_tile] x-tile intermediate.
+
+    **Superseded in the hot path** by :func:`batched_matvec_rowell`: the
+    per-nonzero ``segment_sum`` scatter costs ~100 ns/element on XLA
+    CPU and dominated the whole iteration (the PR-7 "batched loop loses
+    to the python loop by 30×" regression was entirely this op).  Kept
+    as the stream-layout reference implementation.
     """
     acc = scheme.spmv_acc_dtype
     G = x.shape[0]
@@ -129,6 +134,27 @@ def batched_matvec_flat(gcols, vals, rows, x, *, n_rows: int,
     prod = vals.astype(acc) * xg.astype(acc)
     seg = partial(jax.ops.segment_sum, num_segments=n_rows)
     y = jax.vmap(seg)(prod, rows)
+    return y.astype(scheme.vector_dtype)
+
+
+def batched_matvec_rowell(cols, vals, x, *,
+                          scheme: PrecisionScheme) -> jax.Array:
+    """Batched SpMV over row-major ELL lanes (the XLA backend's M1).
+
+    ``cols/vals`` are the ``[G, n_pad, W]`` stacked arrays of
+    :func:`repro.sparse.stacking.stack_rowell`; ``x`` is ``[G, n_pad]``.
+    ``y[g, i] = Σ_w vals[g, i, w] · x[g, cols[g, i, w]]`` — a gather
+    plus a dense reduction over the width axis.  No scatter anywhere:
+    this is why one batched iteration costs arithmetic instead of
+    ~100 ns/nonzero of XLA-CPU ``segment_sum`` (see
+    :func:`batched_matvec_flat`).  Casts follow the scheme contract
+    (matrix dtype on ``vals`` chosen by the caller, ``spmv_in`` on the
+    gathered x, accumulate at ``spmv_acc``, result at ``vector``).
+    """
+    acc = scheme.spmv_acc_dtype
+    x_in = x.astype(scheme.spmv_in_dtype)
+    xg = jax.vmap(lambda xv, c: xv[c])(x_in, cols)        # [G, n_pad, W]
+    y = jnp.sum(vals.astype(acc) * xg.astype(acc), axis=-1)
     return y.astype(scheme.vector_dtype)
 
 
@@ -164,7 +190,8 @@ def _batched_init(matvec, diag, b, x0, *, maxiter, scheme, with_trace,
         x=x0, r=r, p=p, rz=rz, rr=rr, active=rr > tol, trace=trace)
 
 
-def _batched_body(matvec, diag, tol, maxiter_vec=None):
+def _batched_body(matvec, diag, tol, maxiter_vec=None, *, bound=None,
+                  write_trace=True):
     """Masked VSR iteration over all lanes.
 
     Frozen (converged) lanes still flow through the arithmetic — that is
@@ -172,12 +199,25 @@ def _batched_body(matvec, diag, tol, maxiter_vec=None):
     so their ``x`` stops updating the iteration they converge.  Division
     garbage a frozen lane may produce (0/0 in alpha/beta) is discarded by
     the same gates: ``where`` selects, it never blends.
+
+    ``bound`` makes the tick *self-gating* so it can run inside an
+    iteration chunk (:func:`_run_chunked`): the tick is a no-op — no
+    state write, no ``k``/``it`` advance — once every lane converged or
+    ``k`` reached ``bound``, which is exactly the predicate the
+    ``while_loop`` ``cond`` checks.  Evaluating it per tick instead of
+    per chunk is what keeps chunked execution bit-identical to k=1 in
+    *every* observable, including iteration counts.  ``write_trace=False``
+    suppresses the per-tick trace scatter (the chunked runner hoists it
+    to one blend per chunk).
     """
 
     def body(s: BatchedCGState) -> BatchedCGState:
         x_new, r_new, p_new, rz_new, rr_new = vsr_iteration(
             matvec, diag, s.x, s.r, s.p, s.rz, dot=_row_dot)
-        keep = s.active
+        go = jnp.any(s.active)
+        if bound is not None:
+            go = go & (s.k < bound)
+        keep = s.active & go
         kv = keep[:, None]
         x = jnp.where(kv, x_new, s.x)
         r = jnp.where(kv, r_new, s.r)
@@ -185,18 +225,79 @@ def _batched_body(matvec, diag, tol, maxiter_vec=None):
         rz = jnp.where(keep, rz_new, s.rz)
         rr = jnp.where(keep, rr_new, s.rr)
         it = s.it + keep.astype(jnp.int32)
-        if s.trace.shape[1]:
-            trace = s.trace.at[:, s.k].set(jnp.where(keep, rr_new,
-                                                     s.trace[:, s.k]))
+        if write_trace and s.trace.shape[1]:
+            safe_k = jnp.minimum(s.k, s.trace.shape[1] - 1)
+            trace = s.trace.at[:, safe_k].set(
+                jnp.where(keep & (s.k < s.trace.shape[1]), rr_new,
+                          s.trace[:, safe_k]))
         else:
             trace = s.trace
-        active = keep & (rr > tol)
+        live = rr > tol
         if maxiter_vec is not None:
-            active = active & (it < maxiter_vec)
-        return BatchedCGState(k=s.k + 1, it=it, x=x, r=r, p=p, rz=rz,
-                              rr=rr, active=active, trace=trace)
+            live = live & (it < maxiter_vec)
+        # a no-op tick (go=False) must not re-evaluate liveness
+        active = jnp.where(keep, live, s.active)
+        return BatchedCGState(k=s.k + go.astype(jnp.int32), it=it, x=x,
+                              r=r, p=p, rz=rz, rr=rr, active=active,
+                              trace=trace)
 
     return body
+
+
+# -------------------------------------------------------- chunked execution
+def _run_chunked(cond, tick, st, *, steps: int, with_trace: bool,
+                 maxiter: int, rr_of):
+    """Drive ``tick`` to completion, ``steps`` ticks per ``while_loop``
+    body (the iteration-chunking knob, ISSUE 7).
+
+    The termination predicate — a host-visible sync on XLA CPU — is
+    evaluated once per *chunk*; each tick inside the chunk self-gates
+    (see ``bound=`` on the tick builders), so results stay bit-identical
+    to ``steps=1`` in every observable: a lane freezes the tick it
+    converges, ``k``/``it`` never overshoot, and trailing in-chunk ticks
+    after global convergence are discarded no-ops.
+
+    With ``with_trace`` the per-tick trace scatter is *hoisted*: ticks
+    run with ``write_trace=False`` while the chunk accumulates the
+    ``steps × G`` post-tick ``rr`` values (via ``rr_of``) and advance
+    flags, then blends them into the trace with one dynamic slice per
+    chunk.  Because every non-final chunk advances ``k`` by exactly
+    ``steps``, each chunk starts at a multiple of ``steps`` — the trace
+    is padded up to a whole number of chunks and cropped on exit.
+    """
+    if steps <= 1:
+        return jax.lax.while_loop(cond, tick, st)
+    if not with_trace:
+        def body(s):
+            return jax.lax.fori_loop(0, steps, lambda _, ss: tick(ss), s)
+        return jax.lax.while_loop(cond, body, st)
+
+    G, width = st.trace.shape
+    n_chunks = -(-maxiter // steps)
+    padded = n_chunks * steps
+    st = st._replace(trace=jnp.pad(st.trace, ((0, 0), (0, padded - width))))
+
+    def body(s):
+        zero = jnp.zeros((), s.k.dtype)
+        k0 = s.k
+
+        def inner(i, carry):
+            ss, rrb, adv = carry
+            s2 = tick(ss)
+            rrb = rrb.at[i].set(rr_of(s2))
+            adv = adv.at[i].set(s2.it != ss.it)   # == this tick's keep mask
+            return s2, rrb, adv
+
+        rrb0 = jnp.zeros((steps, G), s.trace.dtype)
+        adv0 = jnp.zeros((steps, G), bool)
+        s, rrb, adv = jax.lax.fori_loop(0, steps, inner, (s, rrb0, adv0))
+        old = jax.lax.dynamic_slice(s.trace, (zero, k0), (G, steps))
+        blk = jnp.where(adv.T, rrb.T, old)
+        return s._replace(
+            trace=jax.lax.dynamic_update_slice(s.trace, blk, (zero, k0)))
+
+    out = jax.lax.while_loop(cond, body, st)
+    return out._replace(trace=out.trace[:, :width])
 
 
 # ------------------------------------------------------------ compile cache
@@ -224,19 +325,21 @@ def _cached(key, make):
     return fn
 
 
-def _matvec_factory(*, backend, scheme, block_rows, col_tile, n_col_tiles,
-                    n_row_blocks, interpret):
+def _matvec_factory(*, backend, scheme, block_rows=None, col_tile=None,
+                    n_col_tiles=None, interpret=False):
     """``matvec_of(mat) -> matvec`` closure for one backend + bucket shape.
 
     Shared by the solve-to-completion runner and the serving stepper so
-    both paths are guaranteed to compute the same M1.
+    both paths are guaranteed to compute the same M1.  The XLA backend's
+    row-ELL operand (``mat = (cols, vals)``, both ``[G, n_pad, W]``)
+    carries its own shape — the kernel-tiling parameters only matter for
+    Pallas.
     """
     if backend == "xla":
         def matvec_of(mat):
-            gc, v, rw = mat
-            return lambda x: batched_matvec_flat(
-                gc, v, rw, x, n_rows=n_row_blocks * block_rows,
-                padded_cols=n_col_tiles * col_tile, scheme=scheme)
+            cols, vals = mat
+            return lambda x: batched_matvec_rowell(cols, vals, x,
+                                                   scheme=scheme)
     elif backend == "pallas":
         def matvec_of(mat):
             tc, v, lc = mat
@@ -248,27 +351,36 @@ def _matvec_factory(*, backend, scheme, block_rows, col_tile, n_col_tiles,
     return matvec_of
 
 
-def _make_runner(*, backend, scheme, maxiter, with_trace, block_rows,
-                 col_tile, n_col_tiles, n_row_blocks, interpret):
-    """Build the jitted solve-to-completion runner for one bucket shape."""
+def _make_runner(*, backend, scheme, maxiter, with_trace, block_rows=None,
+                 col_tile=None, n_col_tiles=None, steps_per_sync=8,
+                 donate=False, interpret=False):
+    """Build the jitted solve-to-completion runner for one bucket shape.
+
+    ``steps_per_sync`` = iterations per termination-predicate sync (the
+    chunking knob; bit-identical for any value).  ``donate`` marks the
+    ``b``/``x0`` operands donated (off by default — see
+    :func:`jpcg_solve_batched`).
+    """
     matvec_of = _matvec_factory(
         backend=backend, scheme=scheme, block_rows=block_rows,
-        col_tile=col_tile, n_col_tiles=n_col_tiles,
-        n_row_blocks=n_row_blocks, interpret=interpret)
+        col_tile=col_tile, n_col_tiles=n_col_tiles, interpret=interpret)
+    hoist_trace = with_trace and steps_per_sync > 1
 
-    @jax.jit
     def run(mat, diag, b, x0, tol):
         matvec = matvec_of(mat)
         st = _batched_init(matvec, diag, b, x0, maxiter=maxiter,
                            scheme=scheme, with_trace=with_trace, tol=tol)
-        body = _batched_body(matvec, diag, tol)
+        tick = _batched_body(matvec, diag, tol, bound=maxiter,
+                             write_trace=not hoist_trace)
 
         def cond(s):
             return (s.k < maxiter) & jnp.any(s.active)
 
-        return jax.lax.while_loop(cond, body, st)
+        return _run_chunked(cond, tick, st, steps=steps_per_sync,
+                            with_trace=with_trace, maxiter=maxiter,
+                            rr_of=lambda s: s.rr)
 
-    return run
+    return jax.jit(run, donate_argnums=(2, 3) if donate else ())
 
 
 # ---------------------------------------------------------------- public
@@ -299,6 +411,7 @@ def jpcg_solve_batched(problems: Sequence, bs: Optional[Sequence] = None,
                        specialize: bool = True,
                        block_rows: int = 256, col_tile: int = 512,
                        bucket: bool = True, with_trace: bool = False,
+                       steps_per_sync: int = 8, donate: bool = False,
                        interpret: Optional[bool] = None) -> List[CGResult]:
     """Solve B independent SPD systems in one compiled ``lax.while_loop``.
 
@@ -313,6 +426,18 @@ def jpcg_solve_batched(problems: Sequence, bs: Optional[Sequence] = None,
     executable serves every program of the same padded length.  Lanes
     terminate on the fly at their own ``‖r‖² ≤ tol_g``; the compiled
     loop runs until every lane converged or ``maxiter``.
+
+    ``steps_per_sync`` (static, joins the executable cache key) is the
+    iteration-chunking knob: the loop syncs its termination predicate
+    with the host once per that many iterations.  Any value produces
+    bit-identical results — each in-chunk tick self-gates (see
+    :func:`_batched_body`) — so the default 8 trades nothing but
+    predicate-sync latency.  ``donate`` marks the fresh ``b``/``x0``
+    operands donated; it's off by default because a solve-to-completion
+    call consumes them *inside* the computation (XLA's own liveness
+    already reuses the buffers) and would only warn that no output can
+    alias them — donation earns its keep on the serving steppers, whose
+    state argument round-trips through the jit boundary every tick.
     """
     if engine != "vm" and (policy is not None or program is not None):
         raise ValueError(
@@ -337,14 +462,11 @@ def jpcg_solve_batched(problems: Sequence, bs: Optional[Sequence] = None,
         interpret = default_interpret()
 
     if backend == "xla":
-        stacked = stack_flat(
-            [csr_to_bell(a, block_rows=block_rows, col_tile=col_tile)
-             for a in csrs], bucket=bucket)
-        mat = (jnp.asarray(stacked.gcols),
-               jnp.asarray(stacked.vals).astype(scheme.matrix_dtype),
-               jnp.asarray(stacked.rows))
-        n_row_blocks = stacked.n_row_blocks
-        bucket_dims = (stacked.n_row_blocks, stacked.vals.shape[1])
+        stacked = stack_rowell(csrs, bucket=bucket)
+        mat = (jnp.asarray(stacked.cols),
+               jnp.asarray(stacked.vals).astype(scheme.matrix_dtype))
+        n_col_tiles = None
+        bucket_dims = (stacked.padded_rows, stacked.width)
     elif backend == "pallas":
         stacked_e: StackedEllpack = stack_ellpack(
             [csr_to_ellpack(a, block_rows=block_rows, col_tile=col_tile)
@@ -353,7 +475,7 @@ def jpcg_solve_batched(problems: Sequence, bs: Optional[Sequence] = None,
                jnp.asarray(stacked_e.vals).astype(scheme.matrix_dtype),
                jnp.asarray(stacked_e.local_cols))
         stacked = stacked_e
-        n_row_blocks = stacked_e.vals.shape[1]
+        n_col_tiles = stacked_e.n_col_tiles
         bucket_dims = stacked_e.vals.shape[1:]
     else:
         raise ValueError(f"unknown backend {backend!r}")
@@ -390,8 +512,8 @@ def jpcg_solve_batched(problems: Sequence, bs: Optional[Sequence] = None,
         # fallback: the executable is keyed on the bucket — NOT on the
         # program or policy; the program is a runtime operand (program
         # *length* participates only through the operand's shape).
-        from repro.core.compile import canonical_program
-        from repro.core.isa import BUF, SREG, program_token
+        from repro.core.compile import canonical_program, executable_key
+        from repro.core.isa import BUF, SREG
         from repro.core.vm import make_vm_runner
         if program is None:
             policy = "paper" if policy is None else policy
@@ -405,32 +527,39 @@ def jpcg_solve_batched(problems: Sequence, bs: Optional[Sequence] = None,
         runner_kw = dict(
             backend=backend, scheme=scheme, maxiter=maxiter,
             with_trace=with_trace, block_rows=block_rows,
-            col_tile=col_tile, n_col_tiles=stacked.n_col_tiles,
-            n_row_blocks=n_row_blocks, interpret=interpret)
+            col_tile=col_tile, n_col_tiles=n_col_tiles,
+            steps_per_sync=steps_per_sync, donate=donate,
+            interpret=interpret)
+        key_kw = dict(
+            backend=backend, scheme=scheme.name, batch=G,
+            bucket=bucket_dims, maxiter=maxiter, with_trace=with_trace,
+            steps_per_sync=steps_per_sync, donate=donate,
+            interpret=interpret)
         if specialize:
-            key = ("vm_solve_spec", backend, scheme.name, G, bucket_dims,
-                   block_rows, col_tile, stacked.n_col_tiles, maxiter,
-                   with_trace, interpret, program_token(prog_np))
+            key = executable_key("vm_solve_spec", program=prog_np,
+                                 **key_kw)
             run = _cached(key, lambda: make_vm_runner(program=prog_np,
                                                       **runner_kw))
             st = run(mat, diag, b, x0, tol_vec)
         else:
-            key = ("vm_solve", backend, scheme.name, G, bucket_dims,
-                   block_rows, col_tile, stacked.n_col_tiles, maxiter,
-                   with_trace, interpret)
+            key = executable_key("vm_solve", **key_kw)
             run = _cached(key, lambda: make_vm_runner(**runner_kw))
             st = run(jnp.asarray(prog_np), mat, diag, b, x0, tol_vec)
         xs = st.mem[BUF["x"]]
         rrs_dev, trace_dev = st.sregs[SREG["rr"]], st.trace
     elif engine == "phases":
-        key = ("solve", backend, scheme.name, G, bucket_dims, block_rows,
-               col_tile, stacked.n_col_tiles, maxiter, with_trace,
-               interpret)
+        from repro.core.compile import executable_key
+        key = executable_key(
+            "solve", backend=backend, scheme=scheme.name, batch=G,
+            bucket=bucket_dims, maxiter=maxiter, with_trace=with_trace,
+            steps_per_sync=steps_per_sync, donate=donate,
+            interpret=interpret)
         run = _cached(key, lambda: _make_runner(
             backend=backend, scheme=scheme, maxiter=maxiter,
             with_trace=with_trace, block_rows=block_rows,
-            col_tile=col_tile, n_col_tiles=stacked.n_col_tiles,
-            n_row_blocks=n_row_blocks, interpret=interpret))
+            col_tile=col_tile, n_col_tiles=n_col_tiles,
+            steps_per_sync=steps_per_sync, donate=donate,
+            interpret=interpret))
         st = run(mat, diag, b, x0, tol_vec)
         xs, rrs_dev, trace_dev = st.x, st.rr, st.trace
         method = "vsr_batched"

@@ -59,7 +59,7 @@ from repro.core.vsr import (JPCG_MODULES, LOOP_CARRIED, Module, VSRSchedule,
 
 __all__ = ["CompileError", "CompiledProgram", "compile_schedule",
            "compile_policy", "canonical_program", "canonical_length",
-           "PLAIN_CG_MODULES", "OPSPECS", "OpSpec"]
+           "executable_key", "PLAIN_CG_MODULES", "OPSPECS", "OpSpec"]
 
 _N_QUEUES = 8
 
@@ -387,3 +387,43 @@ def canonical_program(policy: str = "paper",
                       ) -> np.ndarray:
     """Compile ``policy`` and pad to the graph's canonical shared length."""
     return compile_policy(policy, modules).padded(canonical_length(modules))
+
+
+def executable_key(kind: str, *, backend: str, scheme: str, bucket,
+                   steps_per_sync: int, donate: bool, interpret: bool,
+                   batch: Optional[int] = None,
+                   maxiter: Optional[int] = None,
+                   chunk: Optional[int] = None,
+                   with_trace: Optional[bool] = None,
+                   program: Optional[np.ndarray] = None) -> tuple:
+    """Canonical executable-cache key for VM/phases runners and steppers.
+
+    One function builds every key so the fields that *must* split
+    executables are impossible to forget at any call site:
+
+    ========================  ==================================================
+    field                     why it splits executables
+    ========================  ==================================================
+    ``kind``                  runner vs stepper, specialized vs generic
+    ``backend`` ``scheme``    different kernels / cast chains
+    ``bucket``                padded operand shape (row-ELL ``(n_pad, W)`` on
+                              XLA, ``(B, T, E, n_tiles)`` on Pallas)
+    ``batch``/``maxiter``/    solve-runner shape + static loop bound /
+    ``with_trace``            trace width
+    ``chunk``                 stepper iteration budget (static)
+    ``steps_per_sync``        iteration-chunking factor — baked into the loop
+                              body structure (ISSUE 7)
+    ``donate``                donation changes the jit wrapper, not just args
+    ``interpret``             Pallas interpreter vs compiled kernel
+    ``program``               folded to :func:`repro.core.isa.program_token`;
+                              only present for *specialized* executables —
+                              generic ones deliberately omit it so any program
+                              of one padded length reuses one executable
+    ========================  ==================================================
+    """
+    key = (kind, backend, scheme, batch, tuple(np.ravel(bucket).tolist()),
+           maxiter, chunk, with_trace, int(steps_per_sync), bool(donate),
+           bool(interpret))
+    if program is not None:
+        key += (program_token(np.asarray(program, np.int32)),)
+    return key

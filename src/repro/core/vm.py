@@ -65,9 +65,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.batch import _cached, _matvec_factory, _row_dot
+from repro.core.batch import _cached, _matvec_factory, _row_dot, _run_chunked
+from repro.core.compile import executable_key
 from repro.core.isa import (BUF, CTRL_ALPHA, ITYPE_COMP, ITYPE_CTRL,
-                            ITYPE_VCTRL, SREG, program_token)
+                            ITYPE_VCTRL, SREG)
 from repro.core.precision import get_scheme
 
 __all__ = ["BatchedVMState", "make_vm_runner", "make_vm_stepper",
@@ -196,7 +197,8 @@ def vm_init(matvec, diag, b, x0, *, maxiter: int, with_trace: bool,
         trace=jnp.zeros((G, maxiter if with_trace else 0), vd))
 
 
-def _vm_body(program, matvec, tol, maxiter_vec=None):
+def _vm_body(program, matvec, tol, maxiter_vec=None, *, bound=None,
+             write_trace=True):
     """One VM tick = run the program once = one JPCG iteration per lane.
 
     Frozen (converged) lanes flow through the arithmetic — dead compute
@@ -205,6 +207,12 @@ def _vm_body(program, matvec, tol, maxiter_vec=None):
     :func:`repro.core.batch._batched_body` bit for bit.  (Queues included:
     a frozen lane's streams must not drift, or continuing a state through
     the serving stepper / bucket growth becomes nondeterministic.)
+
+    ``bound``/``write_trace`` mirror :func:`repro.core.batch._batched_body`:
+    the tick self-gates so it can run inside an iteration chunk (the
+    whole tick is a no-op once every lane converged or ``k`` reached
+    ``bound``), and the chunked with-trace runner hoists the trace
+    scatter out of the tick.
     """
     execute = _make_executor(matvec)
 
@@ -213,18 +221,26 @@ def _vm_body(program, matvec, tol, maxiter_vec=None):
             return execute(program[pc], s)
 
         nxt = jax.lax.fori_loop(0, program.shape[0], step, st)
-        keep = st.active
+        go = jnp.any(st.active)
+        if bound is not None:
+            go = go & (st.k < bound)
+        keep = st.active & go
         mem = jnp.where(keep[None, :, None], nxt.mem, st.mem)
         queues = jnp.where(keep[None, :, None], nxt.queues, st.queues)
         sregs = jnp.where(keep[None, :], nxt.sregs, st.sregs)
         it = st.it + keep.astype(jnp.int32)
         rr = sregs[SREG["rr"]]
-        trace = _masked_trace(st.trace, st.k, keep, nxt.sregs[SREG["rr"]])
-        active = keep & (rr > tol)
+        if write_trace:
+            trace = _masked_trace(st.trace, st.k, keep,
+                                  nxt.sregs[SREG["rr"]])
+        else:
+            trace = st.trace
+        live = rr > tol
         if maxiter_vec is not None:
-            active = active & (it < maxiter_vec)
-        return BatchedVMState(k=st.k + 1, it=it, mem=mem,
-                              queues=queues, sregs=sregs,
+            live = live & (it < maxiter_vec)
+        active = jnp.where(keep, live, st.active)
+        return BatchedVMState(k=st.k + go.astype(jnp.int32), it=it,
+                              mem=mem, queues=queues, sregs=sregs,
                               active=active, trace=trace)
 
     return body
@@ -232,55 +248,87 @@ def _vm_body(program, matvec, tol, maxiter_vec=None):
 
 # -------------------------------------------------------- specialized path
 class _ProgramPlan(NamedTuple):
-    """Trace-time analysis of a concrete program."""
+    """Trace-time analysis of a concrete program.
+
+    ``carried_bufs`` / ``live_queues`` define the *loop-carried* state —
+    everything else provably cannot influence (or be influenced by) the
+    iteration and bypasses the ``lax.while_loop`` entirely:
+
+    * a buffer the program neither loads nor stores (e.g. ``b`` after
+      warm-up) is dead weight — it rides through from the initial state;
+    * a queue whose first access within one program execution is a
+      *write* is **phase-local**: the program re-derives it from memory
+      every iteration, so carrying its value between iterations moves
+      ``[G, n]`` data for nothing.  Only queues that are read before
+      written (live-in) must be carried.  Compiled canonical programs
+      have *zero* live-in queues — every consumed stream is loaded by a
+      VecCtrl ``rd`` or produced by an earlier module in the same
+      execution — so the steady-state carry is exactly the paper's
+      loop-carried vectors plus scalars.
+    """
 
     ops: Tuple[Tuple[int, ...], ...]   # decoded words (python ints)
+    read_bufs: Tuple[int, ...]         # HBM buffers the program loads
     written_bufs: Tuple[int, ...]      # HBM buffers the program stores to
-    accessed_queues: Tuple[int, ...]   # queues read or written (sorted)
-    written_queues: Tuple[int, ...]    # queues written (subset of accessed)
+    carried_bufs: Tuple[int, ...]      # read ∪ written (the mem carry)
+    live_queues: Tuple[int, ...]       # queues read before first write
+    written_queues: Tuple[int, ...]    # queues written
 
 
 def _analyze_program(program: np.ndarray) -> _ProgramPlan:
     """Decode a concrete program and compute the state it touches.
 
-    Only touched buffers/queues enter the specialized loop's carried
-    dataflow; untouched ones bypass the ``lax.while_loop`` entirely (they
-    are reattached from the initial state afterwards).
+    Only touched buffers and *live-in* queues enter the specialized
+    loop's carried dataflow (see :class:`_ProgramPlan`); the rest bypass
+    the ``lax.while_loop`` entirely and are reattached from the initial
+    state afterwards.
     """
     ops = tuple(tuple(int(v) for v in w)
                 for w in np.asarray(program, np.int32))
-    wb, rq, wq = set(), set(), set()
+    rb, wb, wq, live = set(), set(), set(), set()
+
+    def read_queue(q):
+        if q not in wq:                  # first access is a read: live-in
+            live.add(q)
+
     for w in ops:
         if w[0] == ITYPE_VCTRL:
-            if w[2]:                     # rd: mem[buf] -> queue[qd]
-                wq.add(w[6])
+            # combined rd+wr words see pre-instruction state (snapshot
+            # semantics, same as _run_specialized): account the queue
+            # read before the queue write.
             if w[3]:                     # wr: queue[qa] -> mem[buf]
-                rq.add(w[4])
+                read_queue(w[4])
                 wb.add(w[1])
+            if w[2]:                     # rd: mem[buf] -> queue[qd]
+                rb.add(w[1])
+                wq.add(w[6])
         elif w[0] == ITYPE_COMP:
             kind = _BRANCH_OF_MOD[w[1]]
-            rq.add(w[4])                 # qa
+            read_queue(w[4])             # qa
             if kind != 0:                # dot / axpy / div read qb too
-                rq.add(w[5])
+                read_queue(w[5])
             if kind != 1:                # spmv / axpy / div write qd
                 wq.add(w[6])
-    return _ProgramPlan(ops=ops, written_bufs=tuple(sorted(wb)),
-                        accessed_queues=tuple(sorted(rq | wq)),
+    return _ProgramPlan(ops=ops, read_bufs=tuple(sorted(rb)),
+                        written_bufs=tuple(sorted(wb)),
+                        carried_bufs=tuple(sorted(rb | wb)),
+                        live_queues=tuple(sorted(live)),
                         written_queues=tuple(sorted(wq)))
 
 
-def _run_specialized(plan: _ProgramPlan, matvec, mem: List, queues: dict,
+def _run_specialized(plan: _ProgramPlan, matvec, mem: dict, queues: dict,
                      sregs):
     """Execute the program once, straight-line, with static indices.
 
-    ``mem`` is a list of 6 ``[G, n]`` buffers, ``queues`` a dict
-    ``{queue id: [G, n]}`` over the plan's accessed queues.  The
+    ``mem`` is a dict ``{buffer id: [G, n]}`` over the plan's carried
+    buffers, ``queues`` a dict ``{queue id: [G, n]}`` over its live-in
+    queues (phase-local queues materialize on first write).  The
     arithmetic is word-for-word the generic executor's — same ops, same
     order, same dtypes — only the dispatch is resolved at trace time, so
     results are bit-identical to the generic path (and hence to the
     phases oracle).
     """
-    mem = list(mem)
+    mem = dict(mem)
     queues = dict(queues)
     for w in plan.ops:
         if w[0] == ITYPE_VCTRL:
@@ -321,12 +369,14 @@ def _run_specialized(plan: _ProgramPlan, matvec, mem: List, queues: dict,
 class _SpecCarry(NamedTuple):
     """Loop-carried state of the specialized path: per-buffer / per-queue
     arrays instead of the monolithic files, so XLA sees straight-line
-    dataflow through exactly the state the program touches."""
+    dataflow through exactly the state the program *proves* it needs —
+    carried buffers and live-in queues only (:class:`_ProgramPlan`);
+    dead buffers and phase-local queues never enter the loop."""
 
     k: jax.Array
     it: jax.Array
-    mem: Tuple[jax.Array, ...]       # always all 6 buffers, [G, n] each
-    queues: Tuple[jax.Array, ...]    # accessed queues only, [G, n] each
+    mem: Tuple[jax.Array, ...]       # carried buffers only, [G, n] each
+    queues: Tuple[jax.Array, ...]    # live-in queues only, [G, n] each
     sregs: jax.Array
     active: jax.Array
     trace: jax.Array
@@ -334,55 +384,80 @@ class _SpecCarry(NamedTuple):
 
 def _spec_carry_of(st: BatchedVMState, plan: _ProgramPlan) -> _SpecCarry:
     return _SpecCarry(
-        k=st.k, it=st.it, mem=tuple(st.mem[i] for i in range(_N_BUFS)),
-        queues=tuple(st.queues[q] for q in plan.accessed_queues),
+        k=st.k, it=st.it,
+        mem=tuple(st.mem[i] for i in plan.carried_bufs),
+        queues=tuple(st.queues[q] for q in plan.live_queues),
         sregs=st.sregs, active=st.active, trace=st.trace)
 
 
 def _state_of_spec_carry(c: _SpecCarry, st0: BatchedVMState,
                          plan: _ProgramPlan) -> BatchedVMState:
-    """Reassemble a full :class:`BatchedVMState`; queues the program never
-    touches keep their incoming (``st0``) contents."""
+    """Reassemble a full :class:`BatchedVMState`.
+
+    State the loop did not carry passes through from ``st0``: buffers
+    the program never touches, and — since the live-in analysis — every
+    *phase-local* queue (written before read).  A phase-local queue's
+    contents are an artifact of the last execution, re-derived from
+    memory on the next; preserving the incoming value is the documented
+    pass-through contract (asserted by the serving-engine tests).
+    """
+    mem = st0.mem
+    for i, v in zip(plan.carried_bufs, c.mem):
+        mem = mem.at[i].set(v)
     queues = st0.queues
-    for q, v in zip(plan.accessed_queues, c.queues):
+    for q, v in zip(plan.live_queues, c.queues):
         queues = queues.at[q].set(v)
-    return BatchedVMState(k=c.k, it=c.it, mem=jnp.stack(c.mem),
+    return BatchedVMState(k=c.k, it=c.it, mem=mem,
                           queues=queues, sregs=c.sregs, active=c.active,
                           trace=c.trace)
 
 
-def _spec_body(plan: _ProgramPlan, matvec, tol, maxiter_vec=None):
+def _spec_body(plan: _ProgramPlan, matvec, tol, maxiter_vec=None, *,
+               bound=None, write_trace=True):
     """Specialized VM tick — identical masking semantics to
-    :func:`_vm_body`, applied per touched buffer/queue."""
+    :func:`_vm_body`, applied per carried buffer/queue; ``bound`` makes
+    the tick self-gating for chunked execution (see
+    :func:`repro.core.batch._batched_body`)."""
     wb = frozenset(plan.written_bufs)
     wq = frozenset(plan.written_queues)
 
     def body(c: _SpecCarry) -> _SpecCarry:
-        q_in = dict(zip(plan.accessed_queues, c.queues))
-        n_mem, n_q, n_sregs = _run_specialized(plan, matvec, list(c.mem),
-                                               q_in, c.sregs)
-        keep = c.active
+        m_in = dict(zip(plan.carried_bufs, c.mem))
+        q_in = dict(zip(plan.live_queues, c.queues))
+        n_mem, n_q, n_sregs = _run_specialized(plan, matvec, m_in, q_in,
+                                               c.sregs)
+        go = jnp.any(c.active)
+        if bound is not None:
+            go = go & (c.k < bound)
+        keep = c.active & go
         kv = keep[:, None]
-        mem = tuple(jnp.where(kv, n_mem[i], c.mem[i]) if i in wb
-                    else c.mem[i] for i in range(_N_BUFS))
+        mem = tuple(jnp.where(kv, n_mem[i], old) if i in wb else old
+                    for i, old in zip(plan.carried_bufs, c.mem))
         queues = tuple(jnp.where(kv, n_q[q], old) if q in wq else old
-                       for q, old in zip(plan.accessed_queues, c.queues))
+                       for q, old in zip(plan.live_queues, c.queues))
         sregs = jnp.where(keep[None, :], n_sregs, c.sregs)
         it = c.it + keep.astype(jnp.int32)
         rr = sregs[SREG["rr"]]
-        trace = _masked_trace(c.trace, c.k, keep, n_sregs[SREG["rr"]])
-        active = keep & (rr > tol)
+        if write_trace:
+            trace = _masked_trace(c.trace, c.k, keep, n_sregs[SREG["rr"]])
+        else:
+            trace = c.trace
+        live = rr > tol
         if maxiter_vec is not None:
-            active = active & (it < maxiter_vec)
-        return _SpecCarry(k=c.k + 1, it=it, mem=mem, queues=queues,
-                          sregs=sregs, active=active, trace=trace)
+            live = live & (it < maxiter_vec)
+        active = jnp.where(keep, live, c.active)
+        return _SpecCarry(k=c.k + go.astype(jnp.int32), it=it, mem=mem,
+                          queues=queues, sregs=sregs, active=active,
+                          trace=trace)
 
     return body
 
 
 # ------------------------------------------------------------ executables
-def make_vm_runner(*, backend, scheme, maxiter, with_trace, block_rows,
-                   col_tile, n_col_tiles, n_row_blocks, interpret=False,
+def make_vm_runner(*, backend, scheme, maxiter, with_trace,
+                   block_rows=None, col_tile=None, n_col_tiles=None,
+                   steps_per_sync: int = 8, donate: bool = False,
+                   interpret=False,
                    program: Optional[np.ndarray] = None):
     """Build the jitted solve-to-completion VM runner for one bucket.
 
@@ -397,54 +472,69 @@ def make_vm_runner(*, backend, scheme, maxiter, with_trace, block_rows,
     ``run(mat, diag, b, x0, tol) -> BatchedVMState`` — and callers must
     key their cache on :func:`repro.core.isa.program_token` of the
     program as well.
+
+    ``steps_per_sync`` = VM ticks per termination-predicate sync
+    (bit-identical for any value — ticks self-gate; see
+    :func:`repro.core.batch._run_chunked`); it and ``donate`` must join
+    the caller's cache key (:func:`repro.core.compile.executable_key`).
+    ``donate=True`` donates the ``b``/``x0`` operands into the warm-up —
+    only safe when the caller constructs them fresh per call.
     """
     scheme = get_scheme(scheme)
     matvec_of = _matvec_factory(
         backend=backend, scheme=scheme, block_rows=block_rows,
-        col_tile=col_tile, n_col_tiles=n_col_tiles,
-        n_row_blocks=n_row_blocks, interpret=interpret)
+        col_tile=col_tile, n_col_tiles=n_col_tiles, interpret=interpret)
+    hoist_trace = with_trace and steps_per_sync > 1
+    rr_of = lambda s: s.sregs[SREG["rr"]]  # noqa: E731
 
     if program is None:
-        @jax.jit
         def run(program, mat, diag, b, x0, tol):
             matvec = matvec_of(mat)
             st = vm_init(matvec, diag, b, x0, maxiter=maxiter,
                          with_trace=with_trace, tol=tol)
-            body = _vm_body(program, matvec, tol)
+            tick = _vm_body(program, matvec, tol, bound=maxiter,
+                            write_trace=not hoist_trace)
 
             def cond(s):
                 return (s.k < maxiter) & jnp.any(s.active)
 
-            return jax.lax.while_loop(cond, body, st)
+            return _run_chunked(cond, tick, st, steps=steps_per_sync,
+                                with_trace=with_trace, maxiter=maxiter,
+                                rr_of=rr_of)
 
-        return run
+        return jax.jit(run, donate_argnums=(3, 4) if donate else ())
 
     plan = _analyze_program(program)
 
-    @jax.jit
     def run_spec(mat, diag, b, x0, tol):
         matvec = matvec_of(mat)
         st0 = vm_init(matvec, diag, b, x0, maxiter=maxiter,
                       with_trace=with_trace, tol=tol)
-        body = _spec_body(plan, matvec, tol)
+        tick = _spec_body(plan, matvec, tol, bound=maxiter,
+                          write_trace=not hoist_trace)
 
         def cond(c):
             return (c.k < maxiter) & jnp.any(c.active)
 
-        c = jax.lax.while_loop(cond, body, _spec_carry_of(st0, plan))
+        c = _run_chunked(cond, tick, _spec_carry_of(st0, plan),
+                         steps=steps_per_sync, with_trace=with_trace,
+                         maxiter=maxiter, rr_of=rr_of)
         return _state_of_spec_carry(c, st0, plan)
 
-    return run_spec
+    return jax.jit(run_spec, donate_argnums=(2, 3) if donate else ())
 
 
-def make_vm_stepper(*, backend, scheme, block_rows, col_tile, n_col_tiles,
-                    n_row_blocks, chunk, interpret=False,
+def make_vm_stepper(*, backend, scheme, bucket, chunk, block_rows=None,
+                    col_tile=None, n_col_tiles=None,
+                    steps_per_sync: int = 8, donate: bool = False,
+                    interpret=False,
                     program: Optional[np.ndarray] = None):
     """Jitted bounded VM stepper for incremental serving (SolverEngine).
 
     Runs at most ``chunk`` program executions (= iterations) from a given
     state; per-lane budgets come in as ``maxiter_vec``.  Cached in the
-    batch compile cache.
+    batch compile cache; ``bucket`` is the padded-operand dims tuple that
+    keys the cache (row-ELL ``(n_pad, W)`` on XLA).
 
     * ``program=None`` — generic: cached per (backend, scheme, bucket,
       chunk), NOT per program, so every policy's program reuses one
@@ -456,61 +546,77 @@ def make_vm_stepper(*, backend, scheme, block_rows, col_tile, n_col_tiles,
       schedule costs one.  Returns
       ``step(mat, state, tol, maxiter_vec) -> state``.
 
-    (No separate diag operand on either path — the preconditioner lives
-    in ``mem[M]``.)
+    ``steps_per_sync`` ticks run per termination sync (capped at
+    ``chunk``; bit-identical — each tick self-gates on the remaining
+    budget, so ``k`` never overshoots ``chunk``).  ``donate=True``
+    donates the *state* operand: the caller must not touch the passed
+    state again (the serving engine's linear state hand-off; anything it
+    retains across a step — harvested results — must be materialized
+    first).  (No separate diag operand on either path — the
+    preconditioner lives in ``mem[M]``.)
     """
     scheme = get_scheme(scheme)
+    inner = max(1, min(int(steps_per_sync), int(chunk)))
+    key_kw = dict(backend=backend, scheme=scheme.name, bucket=bucket,
+                  chunk=chunk, steps_per_sync=inner, donate=donate,
+                  interpret=interpret)
+
+    def chunked(cond, tick, st):
+        if inner <= 1:
+            return jax.lax.while_loop(cond, tick, st)
+        return jax.lax.while_loop(
+            cond,
+            lambda s: jax.lax.fori_loop(0, inner, lambda _, ss: tick(ss),
+                                        s),
+            st)
+
     if program is None:
-        key = ("vm_step", backend, scheme.name, block_rows, col_tile,
-               n_col_tiles, n_row_blocks, chunk, interpret)
+        key = executable_key("vm_step", **key_kw)
 
         def make():
             matvec_of = _matvec_factory(
                 backend=backend, scheme=scheme, block_rows=block_rows,
                 col_tile=col_tile, n_col_tiles=n_col_tiles,
-                n_row_blocks=n_row_blocks, interpret=interpret)
+                interpret=interpret)
 
-            @jax.jit
             def step(program, mat, state, tol, maxiter_vec):
                 matvec = matvec_of(mat)
-                body = _vm_body(program, matvec, tol, maxiter_vec)
                 start = state.k
+                tick = _vm_body(program, matvec, tol, maxiter_vec,
+                                bound=start + chunk)
 
                 def cond(s):
                     return (s.k - start < chunk) & jnp.any(s.active)
 
-                return jax.lax.while_loop(cond, body, state)
+                return chunked(cond, tick, state)
 
-            return step
+            return jax.jit(step, donate_argnums=(2,) if donate else ())
 
         return _cached(key, make)
 
     prog = np.asarray(program, np.int32)
-    key = ("vm_step_spec", backend, scheme.name, block_rows, col_tile,
-           n_col_tiles, n_row_blocks, chunk, interpret,
-           program_token(prog))
+    key = executable_key("vm_step_spec", program=prog, **key_kw)
 
     def make_spec():
         matvec_of = _matvec_factory(
             backend=backend, scheme=scheme, block_rows=block_rows,
             col_tile=col_tile, n_col_tiles=n_col_tiles,
-            n_row_blocks=n_row_blocks, interpret=interpret)
+            interpret=interpret)
         plan = _analyze_program(prog)
 
-        @jax.jit
         def step(mat, state, tol, maxiter_vec):
             matvec = matvec_of(mat)
-            body = _spec_body(plan, matvec, tol, maxiter_vec)
             start = state.k
+            tick = _spec_body(plan, matvec, tol, maxiter_vec,
+                              bound=start + chunk)
 
             def cond(c):
                 return (c.k - start < chunk) & jnp.any(c.active)
 
-            c = jax.lax.while_loop(cond, body,
-                                   _spec_carry_of(state, plan))
+            c = chunked(cond, tick, _spec_carry_of(state, plan))
             return _state_of_spec_carry(c, state, plan)
 
-        return step
+        return jax.jit(step, donate_argnums=(1,) if donate else ())
 
     return _cached(key, make_spec)
 

@@ -18,7 +18,9 @@ bucket, and its own compiled *program* — but programs are runtime
 operands, so the compile-cache consequences are deliberately asymmetric:
 
 * a new **scheme** (or a new bucket shape) costs one new VM executable —
-  the cache key is ``(backend, scheme, bucket dims, chunk)``;
+  the cache key is :func:`repro.core.compile.executable_key`
+  ``(kind, backend, scheme, bucket dims, chunk, steps_per_sync, donate,
+  interpret)``;
 * a new **policy** costs *nothing*: pools that differ only in policy
   share one jitted stepper and just pass a different ``int32[P, 8]``
   program (all programs are NOP-padded to one canonical length by
@@ -54,6 +56,16 @@ State-preservation invariants (regression-locked in ``tests``):
   converged slot's state is bit-stable no matter how many ticks the
   surviving lanes keep running.
 
+Iteration economics (PR 7): each tick donates the pool's state into the
+jitted stepper (``cfg.donate``, default on — so :meth:`_Pool.harvest`
+materializes results to host before the buffers are consumed), runs
+``steps_per_sync`` VM iterations per device round-trip inside the
+chunk, and — when the occupied fraction drops below
+``cfg.compact_fraction`` at a step boundary — repacks live lanes into
+the smallest power-of-two lane bucket (:meth:`_Pool.maybe_compact`) so
+converged lanes stop costing arithmetic.  Admission grows the lane
+bucket back on demand.
+
 >>> eng = SolverEngine(SolverEngineConfig(batch_slots=8, block_rows=8,
 ...                                       col_tile=128))
 >>> rid = eng.submit(a, tol=1e-12)                      # paper policy
@@ -70,16 +82,15 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.batch import (_as_csr, batched_matvec_flat,
+from repro.core.batch import (_as_csr, batched_matvec_rowell,
                               batched_matvec_ellpack)
 from repro.core.cg import CGResult
 from repro.core.compile import canonical_program
 from repro.core.isa import BUF, SREG
 from repro.core.precision import get_scheme
 from repro.core.vm import BatchedVMState, make_vm_stepper
-from repro.sparse.bell import csr_to_bell
 from repro.sparse.ellpack import csr_to_ellpack
-from repro.sparse.stacking import bucket_up, flatten_bell, pad_ellpack
+from repro.sparse.stacking import bucket_up, csr_rowell, pad_ellpack
 
 __all__ = ["SolverEngineConfig", "SolverEngine"]
 
@@ -97,14 +108,16 @@ class SolverEngineConfig:
     backend: str = "xla"              # "xla" | "pallas"
     interpret: Optional[bool] = None  # pallas backend: None = auto
     specialize: bool = True           # program-specialized steppers
+    steps_per_sync: int = 8           # VM ticks per termination sync
+    donate: bool = True               # donate state into each step
+    compact_fraction: float = 0.5     # repack lanes when live/lanes < this
 
 
-@partial(jax.jit, static_argnames=("n_rows", "padded_cols", "scheme"))
-def _lane_init_flat(gc, v, rw, diag, b, x0, *, n_rows, padded_cols, scheme):
+@partial(jax.jit, static_argnames=("scheme",))
+def _lane_init_rowell(cols, vals, diag, b, x0, *, scheme):
     """JPCG warm-up for one lane (Alg. 1 lines 1–5, batch-of-one view)."""
-    y = batched_matvec_flat(gc[None], v[None], rw[None], x0[None],
-                            n_rows=n_rows, padded_cols=padded_cols,
-                            scheme=scheme)[0]
+    y = batched_matvec_rowell(cols[None], vals[None], x0[None],
+                              scheme=scheme)[0]
     r = b - y
     z = r / diag
     return r, z, jnp.dot(r, z), jnp.dot(r, r)
@@ -133,9 +146,9 @@ class _Pool:
         self.interpret = interpret
         self.program_np = np.asarray(canonical_program(policy), np.int32)
         self.program = jnp.asarray(self.program_np)
-        S = cfg.batch_slots
-        self.req_of_slot: list = [None] * S      # request id or None
-        self.n_of_slot = np.zeros(S, np.int64)   # logical n per slot
+        self.slots = cfg.batch_slots             # current lane capacity
+        self.req_of_slot: list = [None] * self.slots   # request id or None
+        self.n_of_slot = np.zeros(self.slots, np.int64)  # logical n per slot
         self.bucket = None                       # per-backend dims tuple
         self.mat = None                          # slot-stacked arrays
         self.state: Optional[BatchedVMState] = None
@@ -144,31 +157,39 @@ class _Pool:
 
     # ------------------------------------------------------------ sizing
     def _dims_of(self, m):
-        """Bucket signature: (row blocks, stream/slot dims..., col tiles).
+        """Pallas bucket signature: (row blocks, slabs, ell, col tiles).
 
-        xla uses the flat stream — (blocks, stream length, tiles); pallas
-        keeps the slot-major structure — (blocks, slabs, ell, tiles).
+        The XLA backend's row-ELL dims — ``(padded rows, row width)`` —
+        come straight from the CSR in :meth:`admit`.
         """
-        if self.cfg.backend == "xla":
-            return (m.n_row_blocks, m.stored_entries, m.n_col_tiles)
         return (m.n_row_blocks, m.n_slabs, m.ell, m.n_col_tiles)
 
+    def _n_pad(self, dims):
+        if self.cfg.backend == "xla":
+            return dims[0]
+        return dims[0] * self.cfg.block_rows
+
     def _alloc(self, dims):
-        """Allocate (or grow) the slot-stacked arrays for bucket ``dims``."""
-        S = self.cfg.batch_slots
-        B, n_tiles = dims[0], dims[-1]
+        """(Re)allocate the slot-stacked arrays for bucket ``dims`` at the
+        current lane capacity ``self.slots``, copying any in-flight lanes.
+
+        Serves three resize paths with one copy-and-pad: first admission,
+        bucket growth (a larger problem arrives), and lane growth
+        (admission after converged-lane compaction shrank the pool).
+        """
+        S = self.slots
         vd = self.scheme.vector_dtype
         md = self.scheme.matrix_dtype
-        n_pad = B * self.cfg.block_rows
+        n_pad = self._n_pad(dims)
         old_mat, old_state = self.mat, self.state
 
         if self.cfg.backend == "xla":
-            N = dims[1]
-            # zero padding entries are (col 0, val 0, row 0): harmless
-            mat = (jnp.zeros((S, N), jnp.int32), jnp.zeros((S, N), md),
-                   jnp.zeros((S, N), jnp.int32))
+            N, W = dims
+            # zero padding entries are (col 0, val 0): harmless
+            mat = (jnp.zeros((S, N, W), jnp.int32),
+                   jnp.zeros((S, N, W), md))
         else:
-            _, T, L, _ = dims
+            B, T, L, _ = dims
             R = self.cfg.block_rows
             mat = (jnp.zeros((S, B, T), jnp.int32),
                    jnp.zeros((S, B, T, L, R), md),
@@ -184,21 +205,30 @@ class _Pool:
         maxiter_vec = jnp.zeros(S, jnp.int32)
 
         if old_mat is not None:
-            # Growing the bucket: copy every old lane into the new arrays
-            # — mem, sregs AND queues (live streams must survive growth;
-            # padded tails stay zero, which is what a wider VM would hold
-            # for rows that never existed).
+            # Growing bucket and/or lane count: copy every old lane into
+            # the new arrays — mem, sregs AND queues (live streams must
+            # survive growth; padded tails stay zero, which is what a
+            # wider VM would hold for rows that never existed).  New
+            # lanes keep the fresh-alloc empty-lane state (unit diag).
             def grow(new, old):
                 pads = [(0, n - o) for n, o in zip(new.shape, old.shape)]
                 return jnp.pad(old, pads)
             mat = tuple(grow(n, o) for n, o in zip(mat, old_mat))
+            S_old = old_state.mem.shape[1]
             old_n = old_state.mem.shape[-1]
-            mem = mem.at[:, :, :old_n].set(old_state.mem)
-            queues = state.queues.at[:, :, :old_n].set(old_state.queues)
+            mem = mem.at[:, :S_old, :old_n].set(old_state.mem)
+            queues = state.queues.at[:, :S_old, :old_n].set(
+                old_state.queues)
             state = state._replace(
-                k=old_state.k, it=old_state.it, mem=mem, queues=queues,
-                sregs=old_state.sregs, active=old_state.active)
-            tol, maxiter_vec = self.tol, self.maxiter_vec
+                k=old_state.k, it=grow(state.it, old_state.it), mem=mem,
+                queues=queues, sregs=grow(state.sregs, old_state.sregs),
+                active=grow(state.active, old_state.active))
+            tol = tol.at[:S_old].set(self.tol)
+            maxiter_vec = maxiter_vec.at[:S_old].set(self.maxiter_vec)
+        if len(self.req_of_slot) < S:
+            self.req_of_slot += [None] * (S - len(self.req_of_slot))
+            self.n_of_slot = np.pad(self.n_of_slot,
+                                    (0, S - self.n_of_slot.shape[0]))
         self.bucket = dims
         self.mat = mat
         self.state = state
@@ -209,6 +239,11 @@ class _Pool:
     def admit(self, a, b, x0, tol, maxiter) -> int:
         """Place one system into a free slot; returns the slot index."""
         free = [s for s, r in enumerate(self.req_of_slot) if r is None]
+        if not free and self.slots < self.cfg.batch_slots:
+            # Compaction shrank the pool; grow lanes back for this admit.
+            self.slots = min(self.cfg.batch_slots, bucket_up(self.slots + 1))
+            self._alloc(self.bucket)
+            free = [s for s, r in enumerate(self.req_of_slot) if r is None]
         if not free:
             raise RuntimeError(
                 f"no free solver slots in pool "
@@ -217,22 +252,21 @@ class _Pool:
         cfg = self.cfg
         a = _as_csr(a)
         if cfg.backend == "xla":
-            m = csr_to_bell(a, block_rows=cfg.block_rows,
-                            col_tile=cfg.col_tile)
+            cols_l, vals_l = csr_rowell(a)
+            dims = (bucket_up(a.shape[0]), bucket_up(cols_l.shape[1]))
         else:
             m = csr_to_ellpack(a, block_rows=cfg.block_rows,
                                col_tile=cfg.col_tile)
-        dims = tuple(bucket_up(d) for d in self._dims_of(m))
+            dims = tuple(bucket_up(d) for d in self._dims_of(m))
         if self.bucket is None or any(d > o for d, o in
                                       zip(dims, self.bucket)):
             grown = dims if self.bucket is None else tuple(
                 max(d, o) for d, o in zip(dims, self.bucket))
             self._alloc(grown)
         if cfg.backend == "xla":
-            gc, v, rw = flatten_bell(m)
-            N = self.bucket[1]
-            lanes = tuple(np.pad(x, (0, N - x.shape[0]))
-                          for x in (gc, v, rw))
+            N, W = self.bucket
+            pads = ((0, N - cols_l.shape[0]), (0, W - cols_l.shape[1]))
+            lanes = (np.pad(cols_l, pads), np.pad(vals_l, pads))
         else:
             B, T, L, _ = self.bucket
             m = pad_ellpack(m, n_row_blocks=B, n_slabs=T, ell=L)
@@ -255,17 +289,15 @@ class _Pool:
         b_l = jnp.asarray(bb, vd)
         x0_l = jnp.asarray(xx, vd)
 
-        n_tiles = self.bucket[-1]
         if cfg.backend == "xla":
-            gc, v, rw = (arr[s] for arr in self.mat)
-            r, z, rz, rr = _lane_init_flat(
-                gc, v, rw, diag_l, b_l, x0_l, n_rows=n_pad,
-                padded_cols=n_tiles * cfg.col_tile, scheme=self.scheme)
+            gc, v = (arr[s] for arr in self.mat)
+            r, z, rz, rr = _lane_init_rowell(
+                gc, v, diag_l, b_l, x0_l, scheme=self.scheme)
         else:
             tc, v, lc = (arr[s] for arr in self.mat)
             r, z, rz, rr = _lane_init_ell(
                 tc, v, lc, diag_l, b_l, x0_l, col_tile=cfg.col_tile,
-                n_col_tiles=n_tiles, scheme=self.scheme,
+                n_col_tiles=self.bucket[-1], scheme=self.scheme,
                 interpret=self.interpret)
 
         st = self.state
@@ -291,11 +323,14 @@ class _Pool:
 
     def step(self) -> None:
         cfg = self.cfg
+        pallas = cfg.backend == "pallas"
         stepper_kw = dict(
-            backend=cfg.backend, scheme=self.scheme,
-            block_rows=cfg.block_rows, col_tile=cfg.col_tile,
-            n_col_tiles=self.bucket[-1], n_row_blocks=self.bucket[0],
-            chunk=cfg.chunk_iters, interpret=self.interpret)
+            backend=cfg.backend, scheme=self.scheme, bucket=self.bucket,
+            chunk=cfg.chunk_iters, block_rows=cfg.block_rows,
+            col_tile=cfg.col_tile,
+            n_col_tiles=self.bucket[-1] if pallas else None,
+            steps_per_sync=cfg.steps_per_sync, donate=cfg.donate,
+            interpret=self.interpret)
         if cfg.specialize:
             stepper = make_vm_stepper(program=self.program_np, **stepper_kw)
             self.state = stepper(self.mat, self.state, self.tol,
@@ -317,13 +352,54 @@ class _Pool:
             if rid is None or active[s]:
                 continue
             n = int(self.n_of_slot[s])
+            # Materialize to host: with cfg.donate the pool's device state
+            # is consumed by the next step(), which would invalidate any
+            # device view we handed out here.
+            x = np.asarray(self.state.mem[BUF["x"], s, :n])
             done[rid] = CGResult(
-                x=self.state.mem[BUF["x"], s, :n], iterations=int(its[s]),
+                x=x, iterations=int(its[s]),
                 rr=float(rrs[s]), converged=bool(rrs[s] <= tols[s]),
                 residual_trace=None, scheme=self.scheme.name,
                 method=f"vm_engine[{self.policy}]")
             self.req_of_slot[s] = None
         return done
+
+    # --------------------------------------------------------- compaction
+    def maybe_compact(self) -> bool:
+        """Repack live lanes into a smaller lane bucket when most slots
+        sit idle.  Runs only at step boundaries (after harvest), when the
+        occupied fraction drops strictly below ``cfg.compact_fraction``
+        and the occupied count fits a smaller power-of-two lane bucket.
+        Every VM op is lane-independent, so repacking is bitwise-neutral
+        per lane; it trades one retrace (new lane count) for every
+        subsequent tick costing arithmetic proportional to live lanes.
+        Returns True if the pool was repacked."""
+        if self.state is None:
+            return False
+        S = self.slots
+        occ = [s for s, r in enumerate(self.req_of_slot) if r is not None]
+        live = len(occ)
+        if live == 0:
+            return False
+        target = bucket_up(live)
+        if target >= S or live / S >= self.cfg.compact_fraction:
+            return False
+        sel = np.asarray(occ[:target] +
+                         [s for s in range(S) if s not in occ][: target - live],
+                         np.int64)
+        sel_j = jnp.asarray(sel)
+        self.mat = tuple(arr[sel_j] for arr in self.mat)
+        st = self.state
+        self.state = st._replace(
+            it=st.it[sel_j], mem=st.mem[:, sel_j],
+            queues=st.queues[:, sel_j], sregs=st.sregs[:, sel_j],
+            active=st.active[sel_j], trace=st.trace[sel_j])
+        self.tol = self.tol[sel_j]
+        self.maxiter_vec = self.maxiter_vec[sel_j]
+        self.req_of_slot = [self.req_of_slot[s] for s in sel]
+        self.n_of_slot = self.n_of_slot[sel]
+        self.slots = target
+        return True
 
 
 class SolverEngine:
@@ -371,7 +447,11 @@ class SolverEngine:
         def pool_free(p: Optional[_Pool]) -> int:
             if p is None:
                 return self.cfg.batch_slots
-            return sum(r is None for r in p.req_of_slot)
+            # Capacity view: lanes a compacted pool currently materializes
+            # is an implementation detail — admission grows them back, so
+            # free capacity is configured slots minus occupied ones.
+            return self.cfg.batch_slots - sum(
+                r is not None for r in p.req_of_slot)
 
         if pool is not None:
             scheme, policy = pool
@@ -412,7 +492,10 @@ class SolverEngine:
         for pool in self._pools.values():
             if pool.any_active:
                 pool.step()
-        return self._harvest()
+        done = self._harvest()
+        for pool in self._pools.values():
+            pool.maybe_compact()
+        return done
 
     def _harvest(self) -> Dict[int, CGResult]:
         done: Dict[int, CGResult] = {}

@@ -222,7 +222,14 @@ class TestSolverEngine:
         the queue file like ``mem`` — it used to be silently reset to
         zeros, corrupting any program that keeps streams live across
         iterations.  Also checks the in-flight lane still converges to
-        the single-solver answer after growth."""
+        the single-solver answer after growth.
+
+        The two paths exercise different contracts (ISSUE 7): the
+        generic stepper executes queue ops against the full state, so
+        live streams are nonzero and must survive growth; the
+        specialized stepper's dead-state analysis proves the canonical
+        programs' queues phase-local — they *pass through* untouched
+        (stay zero), which growth must likewise preserve."""
         eng = SolverEngine(SolverEngineConfig(
             batch_slots=2, chunk_iters=8, specialize=specialize, **BK))
         hard = tridiagonal_spd(300)
@@ -231,7 +238,11 @@ class TestSolverEngine:
         pool = eng._pool(None, None)
         assert bool(pool.state.active[0])    # still in flight
         q_before = np.asarray(pool.state.queues)
-        assert np.any(q_before != 0.0)
+        if specialize:
+            # pass-through contract: no live-in queues → bit-stable zeros
+            assert np.all(q_before == 0.0)
+        else:
+            assert np.any(q_before != 0.0)
         m_before = np.asarray(pool.state.mem)
 
         r2 = eng.submit(poisson_2d(40))      # larger problem: bucket grows
@@ -315,3 +326,150 @@ class TestSolverEngine:
             np.testing.assert_allclose(np.asarray(eng.results[rid].x),
                                        np.asarray(ref.x), rtol=1e-6,
                                        atol=1e-8)
+
+
+class TestIterationChunking:
+    """ISSUE 7: ``steps_per_sync`` runs k iterations per termination
+    sync; every observable must stay bit-identical to k=1."""
+
+    CHUNKS = (4, 8)
+
+    def _solve(self, probs, k, *, engine, maxiter=2000, tol=1e-12, **kw):
+        return jpcg_solve_batched(probs, tol=tol, maxiter=maxiter,
+                                  with_trace=True, engine=engine,
+                                  steps_per_sync=k, **kw, **BK)
+
+    @pytest.mark.parametrize("engine,kw", [
+        ("phases", {}),
+        ("vm", {"specialize": True}),
+        ("vm", {"specialize": False}),
+    ])
+    def test_chunk_sizes_bit_identical(self, engine, kw):
+        """Per-lane solutions, iteration counts, final ‖r‖² and full
+        residual traces agree bitwise across k ∈ {1, 4, 8} — including a
+        lane that converges mid-chunk (the easy tridiagonal)."""
+        probs = [poisson_2d(12), tridiagonal_spd(300),
+                 tridiagonal_spd(128, off=-0.4)]
+        base = self._solve(probs, 1, engine=engine, **kw)
+        for k in self.CHUNKS:
+            res = self._solve(probs, k, engine=engine, **kw)
+            for r0, r in zip(base, res):
+                assert r.iterations == r0.iterations
+                assert r.rr == r0.rr
+                np.testing.assert_array_equal(np.asarray(r.x),
+                                              np.asarray(r0.x))
+                np.testing.assert_array_equal(
+                    np.asarray(r.residual_trace),
+                    np.asarray(r0.residual_trace))
+
+    @pytest.mark.parametrize("engine,kw", [
+        ("phases", {}),
+        ("vm", {"specialize": True}),
+    ])
+    def test_maxiter_not_multiple_of_chunk(self, engine, kw):
+        """A lane that hits ``maxiter`` mid-chunk must stop at exactly
+        ``maxiter`` iterations (never overshoot to the chunk edge) and
+        report the same truncated trace for every k."""
+        probs = [tridiagonal_spd(300)]
+        base = self._solve(probs, 1, engine=engine, maxiter=37,
+                           tol=1e-30, **kw)
+        assert base[0].iterations == 37 and not base[0].converged
+        for k in self.CHUNKS:
+            res = self._solve(probs, k, engine=engine, maxiter=37,
+                              tol=1e-30, **kw)
+            assert res[0].iterations == 37
+            assert res[0].rr == base[0].rr
+            np.testing.assert_array_equal(
+                np.asarray(res[0].residual_trace),
+                np.asarray(base[0].residual_trace))
+
+
+class TestDonationAndCompaction:
+    """ISSUE 7: donated steppers must not invalidate harvested results;
+    converged-lane compaction repacks without touching live lanes."""
+
+    def test_harvested_results_survive_donating_steps(self):
+        """harvest() hands out host copies: results collected while
+        other lanes keep stepping (donating the pool state each tick)
+        stay bit-stable through completion."""
+        eng = SolverEngine(SolverEngineConfig(
+            batch_slots=4, chunk_iters=8, donate=True, **BK))
+        r_easy = eng.submit(tridiagonal_spd(128, off=-0.1))
+        r_hard = eng.submit(tridiagonal_spd(400))
+        while r_easy not in eng.results:
+            eng.step()
+        x = eng.results[r_easy].x
+        assert isinstance(x, np.ndarray)         # host copy, not a view
+        snap = x.copy()
+        eng.run_to_completion()                  # more donating steps
+        np.testing.assert_array_equal(eng.results[r_easy].x, snap)
+        assert eng.results[r_hard].converged
+
+    def test_results_independent_of_donation(self):
+        """donate on/off is invisible in results — same x bitwise."""
+        probs = [poisson_2d(12), tridiagonal_spd(200)]
+        outs = []
+        for donate in (False, True):
+            eng = SolverEngine(SolverEngineConfig(
+                batch_slots=2, chunk_iters=16, donate=donate, **BK))
+            rids = [eng.submit(a) for a in probs]
+            eng.run_to_completion()
+            outs.append([eng.results[r] for r in rids])
+        for r0, r1 in zip(*outs):
+            assert r0.iterations == r1.iterations
+            np.testing.assert_array_equal(np.asarray(r0.x),
+                                          np.asarray(r1.x))
+
+    def test_compaction_shrinks_pool_and_preserves_results(self):
+        """Seven easy lanes converge early; once they harvest, the pool
+        repacks the surviving lane into the smallest bucket — and the
+        survivor's result is bit-identical to a never-compacting run."""
+        def build(compact_fraction):
+            eng = SolverEngine(SolverEngineConfig(
+                batch_slots=8, chunk_iters=8,
+                compact_fraction=compact_fraction, **BK))
+            easies = [eng.submit(tridiagonal_spd(64 + 8 * i, off=-0.1))
+                      for i in range(7)]
+            hard = eng.submit(tridiagonal_spd(500))
+            return eng, easies, hard
+
+        eng, easies, hard = build(0.5)
+        pool = eng._pool(None, None)
+        compacted = False
+        while pool.any_active:
+            eng.step()
+            compacted = compacted or pool.slots < 8
+        assert compacted and pool.slots < 8
+        assert pool.state.mem.shape[1] == pool.slots
+
+        # compact_fraction=0 disables compaction: the reference run
+        ref, ref_easies, ref_hard = build(0.0)
+        ref.run_to_completion()
+        assert ref._pool(None, None).slots == 8
+        np.testing.assert_array_equal(
+            np.asarray(eng.results[hard].x),
+            np.asarray(ref.results[ref_hard].x))
+        assert eng.results[hard].iterations == \
+            ref.results[ref_hard].iterations
+        for r, rr in zip(easies, ref_easies):
+            np.testing.assert_array_equal(np.asarray(eng.results[r].x),
+                                          np.asarray(ref.results[rr].x))
+
+    def test_admission_regrows_compacted_pool(self):
+        """A compacted pool grows its lane bucket back on demand: a new
+        submit after compaction is admitted, not rejected."""
+        eng = SolverEngine(SolverEngineConfig(
+            batch_slots=8, chunk_iters=8, **BK))
+        for i in range(7):
+            eng.submit(tridiagonal_spd(64 + 8 * i, off=-0.1))
+        hard = eng.submit(tridiagonal_spd(500))
+        pool = eng._pool(None, None)
+        while pool.slots == 8 and pool.any_active:
+            eng.step()
+        assert pool.slots < 8                     # compaction happened
+        assert eng.free_slots() == 7              # capacity view intact
+        late = eng.submit(tridiagonal_spd(300))
+        assert pool.slots >= 2                    # lanes grew back
+        eng.run_to_completion()
+        assert eng.results[late].converged
+        assert eng.results[hard].converged

@@ -107,21 +107,19 @@ def test_program_is_operand_not_trace_constant():
 
 
 # ------------------------------------------------ stepper state handling
-def _vm_operands(probs, tol, scheme="mixed_v3", block_rows=8, col_tile=128):
-    """Replicate jpcg_solve_batched's xla operand packing so runner /
-    stepper state handling can be tested below the batch API."""
+def _vm_operands(probs, tol, scheme="mixed_v3"):
+    """Replicate jpcg_solve_batched's xla operand packing (row-ELL) so
+    runner / stepper state handling can be tested below the batch API.
+    ``bk`` holds the runner kwargs; steppers additionally need the
+    bucket dims — ``mat[0].shape[1:]`` (= padded rows, row width)."""
     import jax.numpy as jnp
 
     from repro.core.precision import get_scheme
-    from repro.sparse.bell import csr_to_bell
-    from repro.sparse.stacking import stack_flat
+    from repro.sparse.stacking import stack_rowell
     sch = get_scheme(scheme)
-    stacked = stack_flat(
-        [csr_to_bell(a, block_rows=block_rows, col_tile=col_tile)
-         for a in probs], bucket=True)
-    mat = (jnp.asarray(stacked.gcols),
-           jnp.asarray(stacked.vals).astype(sch.matrix_dtype),
-           jnp.asarray(stacked.rows))
+    stacked = stack_rowell(list(probs), bucket=True)
+    mat = (jnp.asarray(stacked.cols),
+           jnp.asarray(stacked.vals).astype(sch.matrix_dtype))
     vd = sch.vector_dtype
     G, n_pad = len(probs), stacked.padded_rows
     diag = np.ones((G, n_pad))
@@ -130,9 +128,7 @@ def _vm_operands(probs, tol, scheme="mixed_v3", block_rows=8, col_tile=128):
         n = a.shape[0]
         diag[g, :n] = a.diagonal()
         b[g, :n] = 1.0
-    bk = dict(backend="xla", scheme=scheme, block_rows=block_rows,
-              col_tile=col_tile, n_col_tiles=stacked.n_col_tiles,
-              n_row_blocks=stacked.n_row_blocks)
+    bk = dict(backend="xla", scheme=scheme)
     return (mat, jnp.asarray(diag, vd), jnp.asarray(b, vd),
             jnp.zeros((G, n_pad), vd), jnp.full(G, tol, vd), bk)
 
@@ -163,7 +159,8 @@ def test_stepper_past_trace_width_cannot_clobber_trace(specialize):
     assert int(st.k) == W and st.trace.shape == (1, W)
 
     stepper = make_vm_stepper(
-        chunk=10, program=prog if specialize else None, **bk)
+        chunk=10, bucket=tuple(mat[0].shape[1:]),
+        program=prog if specialize else None, **bk)
     mv = jnp.full(1, 20, jnp.int32)
     for _ in range(2):                           # k: 6 -> 16 -> 20
         if specialize:
@@ -206,7 +203,8 @@ def test_frozen_lane_state_is_bit_stable_through_stepper(specialize):
         st = make_vm_runner(maxiter=0, with_trace=False, **bk)(
             jnp.asarray(prog), mat, diag, b, x0, tolv)
     stepper = make_vm_stepper(
-        chunk=1, program=prog if specialize else None, **bk)
+        chunk=1, bucket=tuple(mat[0].shape[1:]),
+        program=prog if specialize else None, **bk)
     mv = jnp.full(2, 1000, jnp.int32)
 
     def step(s):
@@ -229,6 +227,102 @@ def test_frozen_lane_state_is_bit_stable_through_stepper(specialize):
     assert np.array_equal(np.asarray(st2.sregs[:, frozen]),
                           snap["sregs"][:, frozen])
     assert int(st2.it[frozen]) == int(snap["it"][frozen])
+
+
+@pytest.mark.vm
+@pytest.mark.parametrize("specialize", [True, False])
+def test_stepper_chunk_sizes_bit_identical(specialize):
+    """ISSUE 7: ``steps_per_sync`` (in-chunk iterations per termination
+    sync) must be invisible in every observable — final mem, queues,
+    sregs, it, k bit-identical across k ∈ {1, 4, 8}, including a lane
+    that freezes mid-chunk (the easy lane) while the other keeps going."""
+    import jax.numpy as jnp
+
+    from repro.core.compile import canonical_program
+    from repro.core.vm import make_vm_runner, make_vm_stepper
+    prog = canonical_program("paper")
+    easy, hard = tridiagonal_spd(128, off=-0.1), tridiagonal_spd(256)
+    mat, diag, b, x0, tolv, bk = _vm_operands([easy, hard], tol=1e-12)
+    mv = jnp.full(2, 1000, jnp.int32)
+
+    def boot():
+        if specialize:
+            return make_vm_runner(program=prog, maxiter=0,
+                                  with_trace=False, **bk)(
+                mat, diag, b, x0, tolv)
+        return make_vm_runner(maxiter=0, with_trace=False, **bk)(
+            jnp.asarray(prog), mat, diag, b, x0, tolv)
+
+    finals = {}
+    for sps in (1, 4, 8):
+        stepper = make_vm_stepper(
+            chunk=8, bucket=tuple(mat[0].shape[1:]), steps_per_sync=sps,
+            program=prog if specialize else None, **bk)
+        st = boot()
+        while bool(st.active.any()):
+            if specialize:
+                st = stepper(mat, st, tolv, mv)
+            else:
+                st = stepper(jnp.asarray(prog), mat, st, tolv, mv)
+        finals[sps] = st
+    ref = finals[1]
+    for sps in (4, 8):
+        st = finals[sps]
+        assert int(st.k) == int(ref.k)
+        for f in ("it", "mem", "queues", "sregs"):
+            assert np.array_equal(np.asarray(getattr(st, f)),
+                                  np.asarray(getattr(ref, f))), (sps, f)
+
+
+@pytest.mark.vm
+@pytest.mark.parametrize("specialize", [True, False])
+def test_donating_stepper_consumes_input_state(specialize):
+    """ISSUE 7: ``donate=True`` really donates — the state passed in is
+    deleted by the call (its buffers are aliased into the output), so a
+    caller holding device references across the step reads garbage.
+    This is the contract that forces :meth:`_Pool.harvest` to
+    materialize results to host before the next step."""
+    import jax.numpy as jnp
+
+    from repro.core.compile import canonical_program
+    from repro.core.vm import make_vm_runner, make_vm_stepper
+    prog = canonical_program("paper")
+    mat, diag, b, x0, tolv, bk = _vm_operands(
+        [tridiagonal_spd(200)], tol=1e-12)
+    if specialize:
+        st = make_vm_runner(program=prog, maxiter=0, with_trace=False,
+                            **bk)(mat, diag, b, x0, tolv)
+    else:
+        st = make_vm_runner(maxiter=0, with_trace=False, **bk)(
+            jnp.asarray(prog), mat, diag, b, x0, tolv)
+    stepper = make_vm_stepper(
+        chunk=4, bucket=tuple(mat[0].shape[1:]), donate=True,
+        program=prog if specialize else None, **bk)
+    mv = jnp.full(1, 1000, jnp.int32)
+    if specialize:
+        st2 = stepper(mat, st, tolv, mv)
+    else:
+        st2 = stepper(jnp.asarray(prog), mat, st, tolv, mv)
+    assert int(st2.k) == 4                       # the step itself worked
+    with pytest.raises(RuntimeError):
+        np.asarray(st.mem)                       # donated: deleted
+
+    # ... and donation changes nothing observable: a fresh boot stepped
+    # without donation lands on the bit-identical state.
+    plain = make_vm_stepper(
+        chunk=4, bucket=tuple(mat[0].shape[1:]), donate=False,
+        program=prog if specialize else None, **bk)
+    if specialize:
+        st0 = make_vm_runner(program=prog, maxiter=0, with_trace=False,
+                             **bk)(mat, diag, b, x0, tolv)
+        st3 = plain(mat, st0, tolv, mv)
+    else:
+        st0 = make_vm_runner(maxiter=0, with_trace=False, **bk)(
+            jnp.asarray(prog), mat, diag, b, x0, tolv)
+        st3 = plain(jnp.asarray(prog), mat, st0, tolv, mv)
+    for f in ("it", "mem", "queues", "sregs"):
+        assert np.array_equal(np.asarray(getattr(st2, f)),
+                              np.asarray(getattr(st3, f))), f
 
 
 def test_pad_program_rejects_truncation():
