@@ -29,12 +29,27 @@ trace-time program specialization buys.  The production path's
 dispatch gap cannot silently regress in CI.
 
 Each batched row also reports ``iters_per_s`` — total CG iterations
-retired per second across the whole bag — and ``chunk``, the
+retired per second across the whole bag — ``chunk``, the
 ``steps_per_sync`` iteration-chunking knob the run used (ISSUE 7: k
-iterations per termination sync, bit-identical for any k).
+iterations per termination sync, bit-identical for any k) — and the
+layout economics (ISSUE 8): ``layout`` is the stacked layout the run
+packed (``choose_layout``'s pick for the default ``layout="auto"``
+rows, the explicit override for the skew rows), ``padding_ratio`` is
+stored slots / nnz for that packing, and ``stream_bytes_per_nnz`` the
+measured matrix-stream bytes (at-rest values + local indices, padding
+included) per useful nonzero.
+
+The ``skew_vm_rowell`` / ``skew_vm_sell`` rows time the SAME skewed
+power-law bag through the specialized VM with the layout forced each
+way — sliced-ELL exists for exactly this bag shape, so the smoke lane
+guards that it doesn't lose throughput (:func:`check_sell_speedup`,
+floor :data:`SELL_SPEEDUP_MIN`) and ``run`` asserts the headline byte
+claim: mixed-V3 sliced-ELL streams ≥ :data:`SELL_BYTES_REDUCTION_MIN`
+fewer bytes/nnz than FP64-at-rest row-ELL, measured from the packed
+arrays.  Both layouts are bit-identical (asserted below).
 
 ``python -m benchmarks.batched_solver [--repeat-suite N] [--smoke]
-[--overhead-threshold X] [--speedup-floor X]``
+[--overhead-threshold X] [--speedup-floor X] [--sell-floor X]``
 """
 from __future__ import annotations
 
@@ -47,10 +62,14 @@ import numpy as np
 from benchmarks.common import emit
 from repro.core.batch import batch_cache_info, jpcg_solve_batched
 from repro.core.cg import jpcg_solve
-from repro.sparse import diag_dominant_spd, poisson_2d, tridiagonal_spd
+from repro.core.precision import get_scheme
+from repro.sparse import (diag_dominant_spd, poisson_2d, powerlaw_spd,
+                          tridiagonal_spd)
+from repro.sparse.stacking import choose_layout, stack_rowell, stack_sell
 
 HEADER = ["mode", "systems", "total_iters", "time_s", "systems_per_s",
-          "iters_per_s", "chunk", "speedup", "vm_overhead",
+          "iters_per_s", "chunk", "layout", "padding_ratio",
+          "stream_bytes_per_nnz", "speedup", "vm_overhead",
           "spec_speedup"]
 
 BK = dict(block_rows=8, col_tile=128)
@@ -71,6 +90,20 @@ VM_OVERHEAD_MAX = 1.25
 #: SpMV creeping back, which ran at ~0.03×) trips it, not CI noise.
 SPEC_SPEEDUP_MIN = 1.5
 
+#: CI regression guard (ISSUE 8): on the skewed power-law bag —
+#: sliced-ELL's home turf — the sell-packed specialized VM must be no
+#: slower than the row-ELL packing (systems/s ratio ≥ this floor).
+#: Steady state is ≥ 1 because sell runs strictly fewer padded slots;
+#: the floor sits slightly below parity to absorb CI timer noise on a
+#: bag where both paths take single-digit ms.
+SELL_SPEEDUP_MIN = 0.95
+
+#: Headline byte claim asserted by :func:`run` (ISSUE 8 acceptance):
+#: mixed-V3 sliced-ELL must stream at least this fraction fewer
+#: bytes/nnz than FP64-at-rest row-ELL on the skewed bag, measured
+#: from the packed arrays (fp32+int16 at lower padding vs fp64+int16).
+SELL_BYTES_REDUCTION_MIN = 0.40
+
 
 def _bag(copies: int = 1, smoke: bool = False):
     if smoke:
@@ -88,6 +121,19 @@ def _bag(copies: int = 1, smoke: bool = False):
         poisson_2d(20),
     ]
     return base * copies
+
+
+def _skew_bag(smoke: bool = False):
+    """Power-law row-degree bag — the padding-heavy shape sliced-ELL
+    targets (row-ELL pads every row to the global max width)."""
+    if smoke:
+        return [powerlaw_spd(512, alpha=2.1, seed=5),
+                powerlaw_spd(300, alpha=2.2, seed=1),
+                powerlaw_spd(400, alpha=2.0, seed=2)]
+    return [powerlaw_spd(2048, alpha=2.1, seed=5),
+            powerlaw_spd(1500, alpha=2.2, seed=1),
+            powerlaw_spd(1024, alpha=2.0, seed=2),
+            powerlaw_spd(900, alpha=2.3, seed=3)]
 
 
 def _timed(fn, *args, repeats: int = 7, **kw):
@@ -129,6 +175,20 @@ def check_spec_speedup(rows, floor: float = SPEC_SPEEDUP_MIN):
             "bound — see ARCHITECTURE.md §iteration-economics")
 
 
+def check_sell_speedup(rows, floor: float = SELL_SPEEDUP_MIN):
+    """Raise ``SystemExit`` (nonzero) if sliced-ELL loses throughput to
+    row-ELL on the skewed bag — the ISSUE-8 layout regression guard."""
+    sell = next(r for r in rows if r["mode"] == "skew_vm_sell")
+    rowell = next(r for r in rows if r["mode"] == "skew_vm_rowell")
+    ratio = sell["systems_per_s"] / rowell["systems_per_s"]
+    if ratio < floor:
+        raise SystemExit(
+            f"sliced-ELL regression: sell/rowell throughput ratio "
+            f"{ratio:.2f} on the skewed bag is below the floor {floor} "
+            "(sell runs strictly fewer padded slots there) — see "
+            "ARCHITECTURE.md §sparse-layouts")
+
+
 def run(repeat_suite: int = 1, smoke: bool = False,
         steps_per_sync: int = STEPS_PER_SYNC):
     jax.config.update("jax_enable_x64", True)
@@ -160,28 +220,85 @@ def run(repeat_suite: int = 1, smoke: bool = False,
             assert np.array_equal(np.asarray(r.x), np.asarray(p.x)), \
                 f"{label} not bit-identical to phases engine"
 
-    def row(mode, res, t, chunk="", vm_overhead="", spec_speedup=""):
+    def row(mode, res, t, bag, chunk="", layout="", stacked=None,
+            speedup="", vm_overhead="", spec_speedup=""):
         iters = sum(r.iterations for r in res)
-        return {"mode": mode, "systems": len(probs),
+        return {"mode": mode, "systems": len(bag),
                 "total_iters": iters,
                 "time_s": round(t, 4),
-                "systems_per_s": round(len(probs) / t, 2),
+                "systems_per_s": round(len(bag) / t, 2),
                 "iters_per_s": round(iters / t, 1),
                 "chunk": chunk,
-                "speedup": round(t_loop / t, 2),
+                "layout": layout,
+                "padding_ratio": (f"{stacked.padding_ratio:.3f}"
+                                  if stacked is not None else ""),
+                "stream_bytes_per_nnz": (
+                    f"{stacked.stream_bytes_per_nnz():.2f}"
+                    if stacked is not None else ""),
+                "speedup": speedup,
                 "vm_overhead": vm_overhead,
                 "spec_speedup": spec_speedup}
 
+    # the batched rows above all packed layout="auto"; measure what the
+    # heuristic actually chose for this bag (at the default scheme)
+    sch = get_scheme("mixed_v3")
+    chosen = choose_layout(probs, default="rowell")
+    stack = stack_sell if chosen == "sell" else stack_rowell
+    st = stack(probs, scheme=sch)
+
     k = steps_per_sync
     rows = [
-        row("python_loop", singles, t_loop),
-        row("batched_phases", phases, t_phases, chunk=k),
-        row("batched_vm", vm, t_vm, chunk=k,
+        row("python_loop", singles, t_loop, probs,
+            speedup=round(t_loop / t_loop, 2)),
+        row("batched_phases", phases, t_phases, probs, chunk=k,
+            layout=chosen, stacked=st, speedup=round(t_loop / t_phases, 2)),
+        row("batched_vm", vm, t_vm, probs, chunk=k,
+            layout=chosen, stacked=st, speedup=round(t_loop / t_vm, 2),
             vm_overhead=round(t_vm / t_phases, 2)),
-        row("batched_vm_spec", spec, t_spec, chunk=k,
+        row("batched_vm_spec", spec, t_spec, probs, chunk=k,
+            layout=chosen, stacked=st, speedup=round(t_loop / t_spec, 2),
             vm_overhead=round(t_spec / t_phases, 2),
             spec_speedup=round(t_vm / t_spec, 2)),
     ]
+
+    # --- ISSUE 8: skewed bag, row-ELL vs sliced-ELL head-to-head -----
+    skew = _skew_bag(smoke=smoke)
+    assert choose_layout(skew) == "sell", \
+        "skew bag no longer trips the padding-ratio heuristic"
+    skw = dict(steps_per_sync=steps_per_sync, **kw, **BK)
+    jpcg_solve_batched(skew, engine="vm", layout="rowell", **skw)
+    jpcg_solve_batched(skew, engine="vm", layout="sell", **skw)
+    srow, t_srow = _timed(jpcg_solve_batched, skew, engine="vm",
+                          layout="rowell", **skw)
+    ssell, t_ssell = _timed(jpcg_solve_batched, skew, engine="vm",
+                            layout="sell", **skw)
+    for r, s in zip(srow, ssell):
+        assert r.iterations == s.iterations, "sell/rowell parity"
+        assert np.array_equal(np.asarray(r.x), np.asarray(s.x)), \
+            "sliced-ELL not bit-identical to row-ELL"
+
+    st_row = stack_rowell(skew, scheme=sch)
+    st_sell = stack_sell(skew, scheme=sch)
+    rows += [
+        row("skew_vm_rowell", srow, t_srow, skew, chunk=k,
+            layout="rowell", stacked=st_row),
+        row("skew_vm_sell", ssell, t_ssell, skew, chunk=k,
+            layout="sell", stacked=st_sell),
+    ]
+
+    # headline byte claim (ISSUE 8 acceptance): mixed-V3 at rest in
+    # sliced-ELL vs FP64-at-rest row-ELL, measured from packed arrays
+    st_fp64 = stack_rowell(skew, scheme=get_scheme("fp64"))
+    reduction = 1 - (st_sell.stream_bytes_per_nnz()
+                     / st_fp64.stream_bytes_per_nnz())
+    print(f"# skew bag stream bytes/nnz: fp64 rowell "
+          f"{st_fp64.stream_bytes_per_nnz():.2f} -> mixed_v3 sell "
+          f"{st_sell.stream_bytes_per_nnz():.2f} "
+          f"({reduction:.0%} reduction)")
+    assert reduction >= SELL_BYTES_REDUCTION_MIN, (
+        f"mixed_v3 sliced-ELL byte reduction {reduction:.0%} below the "
+        f"{SELL_BYTES_REDUCTION_MIN:.0%} floor")
+
     emit(rows, HEADER)
     print(f"# batch compile cache: {batch_cache_info()}")
     return rows
@@ -203,6 +320,10 @@ if __name__ == "__main__":
                     help="fail (exit nonzero) if the specialized path's "
                          "speedup over python_loop drops below this (CI "
                          f"uses {SPEC_SPEEDUP_MIN})")
+    ap.add_argument("--sell-floor", type=float, default=None,
+                    help="fail (exit nonzero) if sliced-ELL's systems/s "
+                         "on the skewed bag falls below this fraction of "
+                         f"row-ELL's (CI uses {SELL_SPEEDUP_MIN})")
     args = ap.parse_args()
     out = run(repeat_suite=args.repeat_suite, smoke=args.smoke,
               steps_per_sync=args.steps_per_sync)
@@ -210,3 +331,5 @@ if __name__ == "__main__":
         check_vm_overhead(out, args.overhead_threshold)
     if args.speedup_floor is not None:
         check_spec_speedup(out, args.speedup_floor)
+    if args.sell_floor is not None:
+        check_sell_speedup(out, args.sell_floor)

@@ -12,12 +12,14 @@ JSON files as artifacts.
 ``--smoke`` runs the fast, always-on subset (VSR accounting + the
 batched-solver throughput/VM-overhead section with a reduced bag): a
 quick signal that the numbers still materialize, not a rigorous timing.
-The smoke lane doubles as two regression guards on the specialized VM
-path: after the JSON is written it exits nonzero if ``vm_overhead``
+The smoke lane doubles as three regression guards on the batched
+solver: after the JSON is written it exits nonzero if ``vm_overhead``
 exceeds ``benchmarks.batched_solver.VM_OVERHEAD_MAX`` (1.25, the
-ISSUE-6 dispatch gap) or if ``speedup`` over ``python_loop`` drops
-below ``benchmarks.batched_solver.SPEC_SPEEDUP_MIN`` (1.5, the ISSUE-7
-batched-loop gap — both floors are recorded in the section's JSON
+ISSUE-6 dispatch gap), if ``speedup`` over ``python_loop`` drops below
+``benchmarks.batched_solver.SPEC_SPEEDUP_MIN`` (1.5, the ISSUE-7
+batched-loop gap), or if sliced-ELL's throughput on the skewed
+power-law bag falls below ``SELL_SPEEDUP_MIN`` of row-ELL's (the
+ISSUE-8 layout guard — all floors are recorded in the section's JSON
 ``meta``).
 
 ``--profile DIR`` wraps every section in a ``jax.profiler`` trace
@@ -90,6 +92,9 @@ def main(argv=None):
             if name == "batched_solver":
                 meta["vm_overhead_max"] = batched_solver.VM_OVERHEAD_MAX
                 meta["spec_speedup_min"] = batched_solver.SPEC_SPEEDUP_MIN
+                meta["sell_speedup_min"] = batched_solver.SELL_SPEEDUP_MIN
+                meta["sell_bytes_reduction_min"] = (
+                    batched_solver.SELL_BYTES_REDUCTION_MIN)
                 meta["steps_per_sync"] = batched_solver.STEPS_PER_SYNC
             write_bench_json(name, rows, meta=meta)
         print(f"--- ({elapsed:.1f}s)")
@@ -97,7 +102,8 @@ def main(argv=None):
             # Regression guards (after the JSON is persisted, so a
             # failing run still uploads its numbers as a CI artifact).
             for guard in (batched_solver.check_vm_overhead,
-                          batched_solver.check_spec_speedup):
+                          batched_solver.check_spec_speedup,
+                          batched_solver.check_sell_speedup):
                 try:
                     guard(rows)
                 except SystemExit as e:

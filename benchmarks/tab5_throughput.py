@@ -17,6 +17,7 @@ from repro.core.precision import get_scheme
 from repro.core.vsr import schedule
 from repro.roofline.model import V5E
 from repro.sparse import benchmark_suite
+from repro.sparse.stacking import index_bytes_for
 
 HEADER = ["matrix", "n", "nnz", "scheme", "time_s", "iters", "gflops_host",
           "proj_v5e_gflops", "proj_fop_pct"]
@@ -30,7 +31,9 @@ def _bytes_per_iter(n, nnz, scheme):
     """HBM bytes per iteration under the min-traffic VSR schedule."""
     s = schedule(policy="min_traffic")
     vec_bytes = (s.n_reads + s.n_writes) * n * scheme.vector_bytes
-    mat_bytes = nnz * scheme.nonzero_stream_bytes()
+    # index width follows the layout actually packed for this n
+    mat_bytes = nnz * scheme.nonzero_stream_bytes(
+        index_bytes=index_bytes_for(n))
     return vec_bytes + mat_bytes
 
 

@@ -11,6 +11,7 @@ from repro.core.compile import compile_policy
 from repro.core.isa import derived_mem_instructions
 from repro.core.precision import get_scheme
 from repro.core.vsr import access_counts, schedule
+from repro.sparse.stacking import index_bytes_for
 
 HEADER = ["schedule", "reads", "writes", "total", "isa_reads", "isa_writes",
           "bytes_per_iter_1M_v3"]
@@ -30,7 +31,9 @@ def run():
             assert (m["reads"], m["writes"]) == (c["reads"], c["writes"]), \
                 "compiled ISA program disagrees with VSR analysis"
         vec_bytes = c["total"] * n * v3.vector_bytes
-        mat_bytes = nnz * v3.nonzero_stream_bytes()
+        # real per-layout index width: int32 at n=1M (≥ 2^15 rows)
+        mat_bytes = nnz * v3.nonzero_stream_bytes(
+            index_bytes=index_bytes_for(n))
         rows.append({
             "schedule": pol, "reads": c["reads"], "writes": c["writes"],
             "total": c["total"], "isa_reads": isa_r, "isa_writes": isa_w,

@@ -80,10 +80,12 @@ from repro.core.phases import vsr_iteration
 from repro.core.precision import PrecisionScheme, get_scheme
 from repro.sparse.csr import CSRMatrix, csr_from_coo
 from repro.sparse.ellpack import csr_to_ellpack
-from repro.sparse.stacking import StackedEllpack, stack_ellpack, stack_rowell
+from repro.sparse.stacking import (StackedEllpack, choose_layout,
+                                   stack_ellpack, stack_rowell, stack_sell)
 
 __all__ = ["BatchedCGState", "jpcg_solve_batched", "batched_matvec_flat",
-           "batched_matvec_rowell", "batched_matvec_ellpack",
+           "batched_matvec_rowell", "batched_matvec_sell",
+           "batched_matvec_ellpack", "tree_sum", "rounded_products",
            "batch_cache_info", "batch_cache_clear"]
 
 
@@ -137,24 +139,123 @@ def batched_matvec_flat(gcols, vals, rows, x, *, n_rows: int,
     return y.astype(scheme.vector_dtype)
 
 
+def tree_sum(p, axis: int):
+    """Deterministic halving-tree reduction over ``axis``.
+
+    ``jnp.sum``'s reduce tree depends on the axis *length* on XLA CPU,
+    so trimming trailing zero slots changes result bits — exactly what
+    sliced-ELL does to row-ELL's width.  This fold fixes the bracketing:
+    pad to a power of two with exact zeros, then repeatedly add the top
+    half onto the bottom half.  The bracketing is *suffix-stable* —
+    ``T(2w) = T(w)(lo) + T(w)(hi)`` and an all-zero hi folds away
+    exactly — so a row reduced at any padded width ≥ its nonzero count
+    yields identical bits.  Row-ELL (global W), sliced-ELL (per-slice
+    w ≤ W) and the numpy reference all reduce through this one function,
+    which is what makes the layouts bit-interchangeable.  Works on
+    numpy and jax arrays alike (slicing + ``+`` only).
+
+    Callers that feed *products* into this tree must route them through
+    :func:`rounded_products` — XLA:CPU otherwise contracts a bare
+    multiply feeding the first fold into an FMA, and *which* shapes get
+    contracted is a codegen detail (1-ulp layout-dependent drift,
+    exactly what this function exists to prevent).
+    """
+    ndim = p.ndim
+    axis = axis % ndim
+    w = p.shape[axis]
+    wp = 1 << max(w - 1, 0).bit_length()   # next pow2 (wp >= max(w, 1))
+    if wp != w:
+        xp = np if isinstance(p, np.ndarray) else jnp
+        pad = [(0, 0)] * ndim
+        pad[axis] = (0, wp - w)
+        p = xp.pad(p, pad)
+    w = wp
+    ix = [slice(None)] * ndim
+    while w > 1:
+        h = w // 2
+        lo, hi = list(ix), list(ix)
+        lo[axis] = slice(0, h)
+        hi[axis] = slice(h, w)
+        p = p[tuple(lo)] + p[tuple(hi)]
+        w = h
+    ix[axis] = 0
+    return p[tuple(ix)]
+
+
+def rounded_products(vals, xg, acc):
+    """``vals ⊙ xg`` at ``acc`` dtype, pinned to correctly-rounded bits.
+
+    A bare ``v * x`` feeding an add is fair game for LLVM FMA
+    contraction on XLA:CPU — the add absorbs the *infinitely precise*
+    product, and whether that happens depends on the fused kernel's
+    shape.  Row-ELL (width W) and sliced-ELL (width w ≤ W) compile to
+    different shapes, so contraction showed up as a 1-ulp cross-layout
+    drift (``lax.optimization_barrier`` and XLA fast-math flags do not
+    stop it — it happens at LLVM codegen).  Adding a runtime ±0
+    (``xg * 0``; opaque to the simplifier since x is a traced value)
+    fixes it structurally: the only contractible multiply is consumed
+    *here*, into an add whose other operand is zero — and
+    ``fma(v, x, ±0) ≡ round(v·x)`` — so what reaches the
+    :func:`tree_sum` folds is an add/fma result, never a bare multiply.
+    Bit-exact whether or not the compiler contracts.
+    """
+    v = vals.astype(acc)
+    g = xg.astype(acc)
+    return v * g + g * jnp.zeros((), acc)
+
+
 def batched_matvec_rowell(cols, vals, x, *,
                           scheme: PrecisionScheme) -> jax.Array:
     """Batched SpMV over row-major ELL lanes (the XLA backend's M1).
 
-    ``cols/vals`` are the ``[G, n_pad, W]`` stacked arrays of
+    ``cols/vals`` are the slot-major ``[G, W, n_pad]`` stacked arrays of
     :func:`repro.sparse.stacking.stack_rowell`; ``x`` is ``[G, n_pad]``.
-    ``y[g, i] = Σ_w vals[g, i, w] · x[g, cols[g, i, w]]`` — a gather
-    plus a dense reduction over the width axis.  No scatter anywhere:
+    ``y[g, i] = Σ_w vals[g, w, i] · x[g, cols[g, w, i]]`` — a gather
+    plus a :func:`tree_sum` over the width axis (each tree add is
+    contiguous over the row lanes; the deterministic bracketing is what
+    keeps row-ELL and sliced-ELL bit-identical).  No scatter anywhere:
     this is why one batched iteration costs arithmetic instead of
     ~100 ns/nonzero of XLA-CPU ``segment_sum`` (see
     :func:`batched_matvec_flat`).  Casts follow the scheme contract
-    (matrix dtype on ``vals`` chosen by the caller, ``spmv_in`` on the
-    gathered x, accumulate at ``spmv_acc``, result at ``vector``).
+    (matrix dtype on ``vals`` packed at rest by the stacker, ``spmv_in``
+    on the gathered x, accumulate at ``spmv_acc``, result at
+    ``vector``).
     """
     acc = scheme.spmv_acc_dtype
     x_in = x.astype(scheme.spmv_in_dtype)
-    xg = jax.vmap(lambda xv, c: xv[c])(x_in, cols)        # [G, n_pad, W]
-    y = jnp.sum(vals.astype(acc) * xg.astype(acc), axis=-1)
+    xg = jax.vmap(lambda xv, c: xv[c])(x_in, cols)        # [G, W, n_pad]
+    y = tree_sum(rounded_products(vals, xg, acc), axis=1)
+    return y.astype(scheme.vector_dtype)
+
+
+def batched_matvec_sell(cols, vals, iperm, x, *, groups,
+                        scheme: PrecisionScheme) -> jax.Array:
+    """Batched SpMV over stacked SELL-C-σ lanes (the skewed-matrix M1).
+
+    ``cols/vals`` are the flat slot-major ``[G, L]`` arrays of
+    :func:`repro.sparse.stacking.stack_sell`, ``iperm`` the ``[G,
+    n_pad]`` un-permutation, ``groups`` the static ``(rows, width)``
+    runs.  Each width group is a small row-ELL rectangle: gather +
+    :func:`tree_sum` over its own width.  Because the per-row slot order
+    matches row-ELL and the tree bracketing is suffix-stable, the result
+    is bit-identical to :func:`batched_matvec_rowell` on the same
+    matrix — the layout choice is invisible to the solver trajectory.
+    """
+    acc = scheme.spmv_acc_dtype
+    x_in = x.astype(scheme.spmv_in_dtype)
+    G = x.shape[0]
+    parts, off = [], 0
+    for rows, w in groups:
+        if w == 0:
+            parts.append(jnp.zeros((G, rows), acc))
+            continue
+        c = cols[:, off:off + rows * w].reshape(G, w, rows)
+        v = vals[:, off:off + rows * w].reshape(G, w, rows)
+        xg = jax.vmap(lambda xv, cc: xv[cc])(x_in, c)     # [G, w, rows]
+        parts.append(tree_sum(rounded_products(v, xg, acc), axis=1))
+        off += rows * w
+    y_sorted = jnp.concatenate(parts, axis=1)             # [G, n_pad]
+    y = jnp.take_along_axis(y_sorted, iperm, axis=1)
     return y.astype(scheme.vector_dtype)
 
 
@@ -325,35 +426,61 @@ def _cached(key, make):
     return fn
 
 
-def _matvec_factory(*, backend, scheme, block_rows=None, col_tile=None,
-                    n_col_tiles=None, interpret=False):
+def _matvec_factory(*, backend, scheme, layout=None, groups=None,
+                    block_rows=None, col_tile=None, n_col_tiles=None,
+                    interpret=False):
     """``matvec_of(mat) -> matvec`` closure for one backend + bucket shape.
 
     Shared by the solve-to-completion runner and the serving stepper so
-    both paths are guaranteed to compute the same M1.  The XLA backend's
-    row-ELL operand (``mat = (cols, vals)``, both ``[G, n_pad, W]``)
-    carries its own shape — the kernel-tiling parameters only matter for
-    Pallas.
+    both paths are guaranteed to compute the same M1.  ``layout`` picks
+    the matrix operand format: ``"rowell"`` (XLA default, ``mat = (cols,
+    vals)`` slot-major ``[G, W, n_pad]``), ``"sell"`` (either backend,
+    ``mat = (cols, vals, iperm)`` with static ``groups``), or
+    ``"ellpack"`` (Pallas default, the tiled 3-tuple).  The operands
+    carry their own shapes — the kernel-tiling parameters only matter
+    for the Pallas ellpack path.
     """
-    if backend == "xla":
+    layout = layout or ("rowell" if backend == "xla" else "ellpack")
+    if layout == "sell":
+        if groups is None:
+            raise ValueError("layout='sell' needs the static groups= "
+                             "signature of the stacked operand")
+        if backend == "xla":
+            def matvec_of(mat):
+                cols, vals, iperm = mat
+                return lambda x: batched_matvec_sell(
+                    cols, vals, iperm, x, groups=groups, scheme=scheme)
+        elif backend == "pallas":
+            def matvec_of(mat):
+                from repro.kernels.spmv import spmv_pallas_sell
+                cols, vals, iperm = mat
+                return lambda x: jnp.take_along_axis(
+                    spmv_pallas_sell(cols, vals, x, groups=groups,
+                                     scheme=scheme, interpret=interpret),
+                    iperm, axis=1).astype(scheme.vector_dtype)
+        else:
+            raise ValueError(f"unknown backend {backend!r}")
+    elif backend == "xla" and layout == "rowell":
         def matvec_of(mat):
             cols, vals = mat
             return lambda x: batched_matvec_rowell(cols, vals, x,
                                                    scheme=scheme)
-    elif backend == "pallas":
+    elif backend == "pallas" and layout == "ellpack":
         def matvec_of(mat):
             tc, v, lc = mat
             return lambda x: batched_matvec_ellpack(
                 tc, v, lc, x, col_tile=col_tile, n_col_tiles=n_col_tiles,
                 scheme=scheme, interpret=interpret)
     else:
-        raise ValueError(f"unknown backend {backend!r}")
+        raise ValueError(f"unsupported backend/layout combination "
+                         f"{backend!r}/{layout!r}")
     return matvec_of
 
 
-def _make_runner(*, backend, scheme, maxiter, with_trace, block_rows=None,
-                 col_tile=None, n_col_tiles=None, steps_per_sync=8,
-                 donate=False, interpret=False):
+def _make_runner(*, backend, scheme, maxiter, with_trace, layout=None,
+                 groups=None, block_rows=None, col_tile=None,
+                 n_col_tiles=None, steps_per_sync=8, donate=False,
+                 interpret=False):
     """Build the jitted solve-to-completion runner for one bucket shape.
 
     ``steps_per_sync`` = iterations per termination-predicate sync (the
@@ -362,8 +489,9 @@ def _make_runner(*, backend, scheme, maxiter, with_trace, block_rows=None,
     :func:`jpcg_solve_batched`).
     """
     matvec_of = _matvec_factory(
-        backend=backend, scheme=scheme, block_rows=block_rows,
-        col_tile=col_tile, n_col_tiles=n_col_tiles, interpret=interpret)
+        backend=backend, scheme=scheme, layout=layout, groups=groups,
+        block_rows=block_rows, col_tile=col_tile,
+        n_col_tiles=n_col_tiles, interpret=interpret)
     hoist_trace = with_trace and steps_per_sync > 1
 
     def run(mat, diag, b, x0, tol):
@@ -410,7 +538,8 @@ def jpcg_solve_batched(problems: Sequence, bs: Optional[Sequence] = None,
                        program: Optional[np.ndarray] = None,
                        specialize: bool = True,
                        block_rows: int = 256, col_tile: int = 512,
-                       bucket: bool = True, with_trace: bool = False,
+                       bucket: bool = True, layout: str = "auto",
+                       with_trace: bool = False,
                        steps_per_sync: int = 8, donate: bool = False,
                        interpret: Optional[bool] = None) -> List[CGResult]:
     """Solve B independent SPD systems in one compiled ``lax.while_loop``.
@@ -438,6 +567,18 @@ def jpcg_solve_batched(problems: Sequence, bs: Optional[Sequence] = None,
     already reuses the buffers) and would only warn that no output can
     alias them — donation earns its keep on the serving steppers, whose
     state argument round-trips through the jit boundary every tick.
+
+    ``layout`` picks the stacked matrix format: ``"auto"`` (default)
+    applies the padding-ratio heuristic
+    (:func:`repro.sparse.stacking.choose_layout` — sliced-ELL when
+    ``Σ n·W / Σ nnz`` exceeds
+    :data:`~repro.sparse.stacking.SELL_PADDING_THRESHOLD`, else the
+    backend default), ``"rowell"`` / ``"sell"`` force it on the XLA
+    backend, ``"ellpack"`` / ``"sell"`` on Pallas.  Values are packed at
+    ``scheme.matrix_dtype`` and indices at int16/int32 by ``n_pad`` at
+    stacking time; the layout and index width join the executable cache
+    key.  Every layout is bit-identical to every other for the same
+    scheme (shared :func:`tree_sum` reduction bracketing).
     """
     if engine != "vm" and (policy is not None or program is not None):
         raise ValueError(
@@ -461,13 +602,28 @@ def jpcg_solve_batched(problems: Sequence, bs: Optional[Sequence] = None,
         from repro.kernels.ops import default_interpret
         interpret = default_interpret()
 
-    if backend == "xla":
-        stacked = stack_rowell(csrs, bucket=bucket)
-        mat = (jnp.asarray(stacked.cols),
-               jnp.asarray(stacked.vals).astype(scheme.matrix_dtype))
-        n_col_tiles = None
+    if backend not in ("xla", "pallas"):
+        raise ValueError(f"unknown backend {backend!r}")
+    if layout in (None, "auto"):
+        layout = choose_layout(
+            csrs, default="rowell" if backend == "xla" else "ellpack")
+    groups = None
+    n_col_tiles = None
+    if layout == "sell":
+        stacked = stack_sell(csrs, bucket=bucket, scheme=scheme)
+        mat = (jnp.asarray(stacked.cols), jnp.asarray(stacked.vals),
+               jnp.asarray(stacked.iperm))
+        groups = stacked.groups
+        # flat ints only: executable_key ravels the bucket dims
+        bucket_dims = (stacked.padded_rows,
+                       *(d for rw in groups for d in rw))
+        index_bytes = stacked.index_bytes
+    elif backend == "xla" and layout == "rowell":
+        stacked = stack_rowell(csrs, bucket=bucket, scheme=scheme)
+        mat = (jnp.asarray(stacked.cols), jnp.asarray(stacked.vals))
         bucket_dims = (stacked.padded_rows, stacked.width)
-    elif backend == "pallas":
+        index_bytes = stacked.index_bytes
+    elif backend == "pallas" and layout == "ellpack":
         stacked_e: StackedEllpack = stack_ellpack(
             [csr_to_ellpack(a, block_rows=block_rows, col_tile=col_tile)
              for a in csrs], bucket=bucket)
@@ -477,8 +633,10 @@ def jpcg_solve_batched(problems: Sequence, bs: Optional[Sequence] = None,
         stacked = stacked_e
         n_col_tiles = stacked_e.n_col_tiles
         bucket_dims = stacked_e.vals.shape[1:]
+        index_bytes = int(stacked_e.local_cols.dtype.itemsize)
     else:
-        raise ValueError(f"unknown backend {backend!r}")
+        raise ValueError(f"unsupported backend/layout combination "
+                         f"{backend!r}/{layout!r}")
 
     vd = scheme.vector_dtype
     n_pad = stacked.padded_rows
@@ -526,13 +684,14 @@ def jpcg_solve_batched(problems: Sequence, bs: Optional[Sequence] = None,
         prog_np = np.asarray(program, np.int32)
         runner_kw = dict(
             backend=backend, scheme=scheme, maxiter=maxiter,
-            with_trace=with_trace, block_rows=block_rows,
-            col_tile=col_tile, n_col_tiles=n_col_tiles,
-            steps_per_sync=steps_per_sync, donate=donate,
-            interpret=interpret)
+            with_trace=with_trace, layout=layout, groups=groups,
+            block_rows=block_rows, col_tile=col_tile,
+            n_col_tiles=n_col_tiles, steps_per_sync=steps_per_sync,
+            donate=donate, interpret=interpret)
         key_kw = dict(
             backend=backend, scheme=scheme.name, batch=G,
-            bucket=bucket_dims, maxiter=maxiter, with_trace=with_trace,
+            bucket=bucket_dims, layout=layout, index_bytes=index_bytes,
+            maxiter=maxiter, with_trace=with_trace,
             steps_per_sync=steps_per_sync, donate=donate,
             interpret=interpret)
         if specialize:
@@ -551,15 +710,16 @@ def jpcg_solve_batched(problems: Sequence, bs: Optional[Sequence] = None,
         from repro.core.compile import executable_key
         key = executable_key(
             "solve", backend=backend, scheme=scheme.name, batch=G,
-            bucket=bucket_dims, maxiter=maxiter, with_trace=with_trace,
+            bucket=bucket_dims, layout=layout, index_bytes=index_bytes,
+            maxiter=maxiter, with_trace=with_trace,
             steps_per_sync=steps_per_sync, donate=donate,
             interpret=interpret)
         run = _cached(key, lambda: _make_runner(
             backend=backend, scheme=scheme, maxiter=maxiter,
-            with_trace=with_trace, block_rows=block_rows,
-            col_tile=col_tile, n_col_tiles=n_col_tiles,
-            steps_per_sync=steps_per_sync, donate=donate,
-            interpret=interpret))
+            with_trace=with_trace, layout=layout, groups=groups,
+            block_rows=block_rows, col_tile=col_tile,
+            n_col_tiles=n_col_tiles, steps_per_sync=steps_per_sync,
+            donate=donate, interpret=interpret))
         st = run(mat, diag, b, x0, tol_vec)
         xs, rrs_dev, trace_dev = st.x, st.rr, st.trace
         method = "vsr_batched"

@@ -391,6 +391,8 @@ def canonical_program(policy: str = "paper",
 
 def executable_key(kind: str, *, backend: str, scheme: str, bucket,
                    steps_per_sync: int, donate: bool, interpret: bool,
+                   layout: Optional[str] = None,
+                   index_bytes: Optional[int] = None,
                    batch: Optional[int] = None,
                    maxiter: Optional[int] = None,
                    chunk: Optional[int] = None,
@@ -407,7 +409,15 @@ def executable_key(kind: str, *, backend: str, scheme: str, bucket,
     ``kind``                  runner vs stepper, specialized vs generic
     ``backend`` ``scheme``    different kernels / cast chains
     ``bucket``                padded operand shape (row-ELL ``(n_pad, W)`` on
-                              XLA, ``(B, T, E, n_tiles)`` on Pallas)
+                              XLA, sliced-ELL ``(n_pad, rows0, w0, rows1, w1,
+                              ...)`` — the static group signature — on either
+                              backend, ``(B, T, E, n_tiles)`` on Pallas)
+    ``layout``                matrix operand format (``rowell`` / ``sell`` /
+                              ``ellpack``) — different gather/reduce graphs
+                              even at equal bucket dims (ISSUE 8)
+    ``index_bytes``           stored column-index width (2 = int16 when
+                              ``n_pad < 2^15``, else 4) — changes the operand
+                              dtype the executable is traced for (ISSUE 8)
     ``batch``/``maxiter``/    solve-runner shape + static loop bound /
     ``with_trace``            trace width
     ``chunk``                 stepper iteration budget (static)
@@ -422,8 +432,8 @@ def executable_key(kind: str, *, backend: str, scheme: str, bucket,
     ========================  ==================================================
     """
     key = (kind, backend, scheme, batch, tuple(np.ravel(bucket).tolist()),
-           maxiter, chunk, with_trace, int(steps_per_sync), bool(donate),
-           bool(interpret))
+           layout, index_bytes, maxiter, chunk, with_trace,
+           int(steps_per_sync), bool(donate), bool(interpret))
     if program is not None:
         key += (program_token(np.asarray(program, np.int32)),)
     return key

@@ -56,13 +56,20 @@ class PrecisionScheme:
         return jnp.dtype(self.vector_dtype).itemsize
 
     def nonzero_stream_bytes(self, index_bytes: int = 2) -> int:
-        """Bytes per nonzero in the matrix stream (value + 2 local indices).
+        """Bytes per nonzero in the matrix stream (value + 1 column index).
 
-        The paper's Challenge-3 arithmetic: FP64 nonzero = 128 bits,
-        FP32 nonzero = 96 bits -> with 16-bit local indices (our Serpens-
-        style packing) fp64 = 12 B, fp32 = 8 B, bf16 = 6 B.
+        This mirrors the layouts actually in use: the stacked row-ELL /
+        sliced-ELL slots each hold one value at ``matrix_dtype`` plus
+        one *local* column index — int16 whenever the bucketed row count
+        stays under 2^15 (the default here), int32 beyond.  Pass the
+        real width via ``index_bytes=``
+        :func:`repro.sparse.stacking.index_bytes_for`; padding overheads
+        are measured, not modeled (``stream_bytes_per_nnz()`` on the
+        stacked arrays).  The paper's Challenge-3 arithmetic had
+        2 packed indices per nonzero (Serpens 64-bit words); our
+        row-identity is the lane position, so the second index is free.
         """
-        return self.matrix_bytes + 2 * index_bytes
+        return self.matrix_bytes + index_bytes
 
 
 _f64, _f32, _bf16 = jnp.float64, jnp.float32, jnp.bfloat16

@@ -454,10 +454,10 @@ def _spec_body(plan: _ProgramPlan, matvec, tol, maxiter_vec=None, *,
 
 
 # ------------------------------------------------------------ executables
-def make_vm_runner(*, backend, scheme, maxiter, with_trace,
-                   block_rows=None, col_tile=None, n_col_tiles=None,
-                   steps_per_sync: int = 8, donate: bool = False,
-                   interpret=False,
+def make_vm_runner(*, backend, scheme, maxiter, with_trace, layout=None,
+                   groups=None, block_rows=None, col_tile=None,
+                   n_col_tiles=None, steps_per_sync: int = 8,
+                   donate: bool = False, interpret=False,
                    program: Optional[np.ndarray] = None):
     """Build the jitted solve-to-completion VM runner for one bucket.
 
@@ -482,8 +482,9 @@ def make_vm_runner(*, backend, scheme, maxiter, with_trace,
     """
     scheme = get_scheme(scheme)
     matvec_of = _matvec_factory(
-        backend=backend, scheme=scheme, block_rows=block_rows,
-        col_tile=col_tile, n_col_tiles=n_col_tiles, interpret=interpret)
+        backend=backend, scheme=scheme, layout=layout, groups=groups,
+        block_rows=block_rows, col_tile=col_tile,
+        n_col_tiles=n_col_tiles, interpret=interpret)
     hoist_trace = with_trace and steps_per_sync > 1
     rr_of = lambda s: s.sregs[SREG["rr"]]  # noqa: E731
 
@@ -524,7 +525,8 @@ def make_vm_runner(*, backend, scheme, maxiter, with_trace,
     return jax.jit(run_spec, donate_argnums=(2, 3) if donate else ())
 
 
-def make_vm_stepper(*, backend, scheme, bucket, chunk, block_rows=None,
+def make_vm_stepper(*, backend, scheme, bucket, chunk, layout=None,
+                    groups=None, index_bytes=None, block_rows=None,
                     col_tile=None, n_col_tiles=None,
                     steps_per_sync: int = 8, donate: bool = False,
                     interpret=False,
@@ -558,7 +560,8 @@ def make_vm_stepper(*, backend, scheme, bucket, chunk, block_rows=None,
     scheme = get_scheme(scheme)
     inner = max(1, min(int(steps_per_sync), int(chunk)))
     key_kw = dict(backend=backend, scheme=scheme.name, bucket=bucket,
-                  chunk=chunk, steps_per_sync=inner, donate=donate,
+                  layout=layout, index_bytes=index_bytes, chunk=chunk,
+                  steps_per_sync=inner, donate=donate,
                   interpret=interpret)
 
     def chunked(cond, tick, st):
@@ -575,9 +578,9 @@ def make_vm_stepper(*, backend, scheme, bucket, chunk, block_rows=None,
 
         def make():
             matvec_of = _matvec_factory(
-                backend=backend, scheme=scheme, block_rows=block_rows,
-                col_tile=col_tile, n_col_tiles=n_col_tiles,
-                interpret=interpret)
+                backend=backend, scheme=scheme, layout=layout,
+                groups=groups, block_rows=block_rows, col_tile=col_tile,
+                n_col_tiles=n_col_tiles, interpret=interpret)
 
             def step(program, mat, state, tol, maxiter_vec):
                 matvec = matvec_of(mat)
@@ -599,9 +602,9 @@ def make_vm_stepper(*, backend, scheme, bucket, chunk, block_rows=None,
 
     def make_spec():
         matvec_of = _matvec_factory(
-            backend=backend, scheme=scheme, block_rows=block_rows,
-            col_tile=col_tile, n_col_tiles=n_col_tiles,
-            interpret=interpret)
+            backend=backend, scheme=scheme, layout=layout, groups=groups,
+            block_rows=block_rows, col_tile=col_tile,
+            n_col_tiles=n_col_tiles, interpret=interpret)
         plan = _analyze_program(prog)
 
         def step(mat, state, tol, maxiter_vec):

@@ -41,7 +41,7 @@ from repro.kernels._compat import CompilerParams
 
 from repro.core.precision import PrecisionScheme
 
-__all__ = ["spmv_pallas", "spmv_pallas_batched"]
+__all__ = ["spmv_pallas", "spmv_pallas_batched", "spmv_pallas_sell"]
 
 
 def _spmv_kernel(tile_cols_ref, vals_ref, lcols_ref, x_ref, y_ref, *,
@@ -158,3 +158,66 @@ def spmv_pallas_batched(tile_cols: jax.Array, vals: jax.Array,
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(tile_cols, vals, local_cols, x_in)
+
+
+def _spmv_sell_kernel(cols_ref, vals_ref, x_ref, y_ref, *, acc_dtype):
+    """One system g of one SELL width group: y_sorted[rows] = tree-sum
+    over the group's w slots of vals ⊙ x[cols]."""
+    from repro.core.batch import rounded_products, tree_sum
+    x_lane = x_ref[0]                       # [n_pad] spmv_in_dtype
+    c = cols_ref[0]                         # [w, rows] int16/int32
+    v = vals_ref[0]                         # [w, rows] matrix_dtype
+    xg = jnp.take(x_lane, c.reshape(-1).astype(jnp.int32), axis=0,
+                  indices_are_sorted=False, unique_indices=False,
+                  mode="clip").reshape(v.shape)
+    prod = rounded_products(v, xg, acc_dtype)
+    y_ref[...] = tree_sum(prod, axis=0)[None, :]
+
+
+@functools.partial(jax.jit, static_argnames=("groups", "scheme",
+                                             "interpret"))
+def spmv_pallas_sell(cols: jax.Array, vals: jax.Array, x: jax.Array, *,
+                     groups, scheme: PrecisionScheme,
+                     interpret: bool = False) -> jax.Array:
+    """Batched SELL-C-σ SpMV — one Pallas launch per static width group.
+
+    ``cols/vals`` are the flat slot-major ``[G, L]`` arrays of
+    :func:`repro.sparse.stacking.stack_sell` (values at the scheme's
+    at-rest ``matrix_dtype``, indices int16/int32), ``x`` is
+    ``[G, n_pad]``, ``groups`` the static ``(rows, width)`` signature.
+    Each group is a dense ``[w, rows]`` rectangle whose row reduction is
+    the same deterministic halving tree as the XLA path
+    (:func:`repro.core.batch.tree_sum`), so under ``interpret=True`` the
+    result is bit-identical to :func:`repro.core.batch
+    .batched_matvec_sell` before the un-permutation.
+
+    Returns ``acc_dtype[G, n_pad]`` in **sorted** row order — the caller
+    applies the stacked ``iperm`` (and the vector-dtype cast).
+    """
+    G, n_pad = x.shape
+    acc = scheme.spmv_acc_dtype
+    x_in = x.astype(scheme.spmv_in_dtype)
+    parts, off = [], 0
+    for rows, w in groups:
+        if w == 0:
+            parts.append(jnp.zeros((G, rows), acc))
+            continue
+        c = cols[:, off:off + rows * w].reshape(G, w, rows)
+        v = vals[:, off:off + rows * w].reshape(G, w, rows)
+        y = pl.pallas_call(
+            functools.partial(_spmv_sell_kernel, acc_dtype=acc),
+            grid=(G,),
+            in_specs=[
+                pl.BlockSpec((1, w, rows), lambda g: (g, 0, 0)),
+                pl.BlockSpec((1, w, rows), lambda g: (g, 0, 0)),
+                pl.BlockSpec((1, n_pad), lambda g: (g, 0)),
+            ],
+            out_specs=pl.BlockSpec((1, rows), lambda g: (g, 0)),
+            out_shape=jax.ShapeDtypeStruct((G, rows), acc),
+            compiler_params=CompilerParams(
+                dimension_semantics=("parallel",)),
+            interpret=interpret,
+        )(c, v, x_in)
+        parts.append(y)
+        off += rows * w
+    return jnp.concatenate(parts, axis=1)

@@ -83,14 +83,17 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.batch import (_as_csr, batched_matvec_rowell,
-                              batched_matvec_ellpack)
+                              batched_matvec_sell, batched_matvec_ellpack)
 from repro.core.cg import CGResult
 from repro.core.compile import canonical_program
 from repro.core.isa import BUF, SREG
 from repro.core.precision import get_scheme
 from repro.core.vm import BatchedVMState, make_vm_stepper
+from repro.sparse.csr import CSRMatrix
 from repro.sparse.ellpack import csr_to_ellpack
-from repro.sparse.stacking import bucket_up, csr_rowell, pad_ellpack
+from repro.sparse.stacking import (SELL_SLICE_ROWS, _sell_groups, bucket_up,
+                                   choose_layout, csr_rowell, index_dtype,
+                                   pad_ellpack, sell_slice_widths, stack_sell)
 
 __all__ = ["SolverEngineConfig", "SolverEngine"]
 
@@ -106,6 +109,10 @@ class SolverEngineConfig:
     block_rows: int = 256
     col_tile: int = 512
     backend: str = "xla"              # "xla" | "pallas"
+    layout: str = "auto"              # "auto" | "rowell" | "sell" (xla)
+    #                                   "auto" | "ellpack" | "sell" (pallas);
+    #                                   auto resolves per pool at first admit
+    #                                   via the padding-ratio heuristic
     interpret: Optional[bool] = None  # pallas backend: None = auto
     specialize: bool = True           # program-specialized steppers
     steps_per_sync: int = 8           # VM ticks per termination sync
@@ -118,6 +125,18 @@ def _lane_init_rowell(cols, vals, diag, b, x0, *, scheme):
     """JPCG warm-up for one lane (Alg. 1 lines 1–5, batch-of-one view)."""
     y = batched_matvec_rowell(cols[None], vals[None], x0[None],
                               scheme=scheme)[0]
+    r = b - y
+    z = r / diag
+    return r, z, jnp.dot(r, z), jnp.dot(r, r)
+
+
+@partial(jax.jit, static_argnames=("groups", "scheme"))
+def _lane_init_sell(cols, vals, iperm, diag, b, x0, *, groups, scheme):
+    """JPCG warm-up for one SELL-packed lane.  Used by both backends:
+    the Pallas sell SpMV reduces through the same halving tree, so the
+    XLA spelling is bit-identical and saves one kernel variant here."""
+    y = batched_matvec_sell(cols[None], vals[None], iperm[None], x0[None],
+                            groups=groups, scheme=scheme)[0]
     r = b - y
     z = r / diag
     return r, z, jnp.dot(r, z), jnp.dot(r, r)
@@ -149,11 +168,17 @@ class _Pool:
         self.slots = cfg.batch_slots             # current lane capacity
         self.req_of_slot: list = [None] * self.slots   # request id or None
         self.n_of_slot = np.zeros(self.slots, np.int64)  # logical n per slot
+        self.csr_of_slot: list = [None] * self.slots  # kept for sell rebuild
         self.bucket = None                       # per-backend dims tuple
         self.mat = None                          # slot-stacked arrays
         self.state: Optional[BatchedVMState] = None
         self.tol = None
         self.maxiter_vec = None
+        # Matrix layout, resolved at first admit ("auto" applies the
+        # padding-ratio heuristic to the first admitted system).
+        self.layout = None if cfg.layout == "auto" else cfg.layout
+        self.sell_widths = None                  # per-slice widths (sell)
+        self.groups = None                       # static (rows, w) runs
 
     # ------------------------------------------------------------ sizing
     def _dims_of(self, m):
@@ -165,7 +190,7 @@ class _Pool:
         return (m.n_row_blocks, m.n_slabs, m.ell, m.n_col_tiles)
 
     def _n_pad(self, dims):
-        if self.cfg.backend == "xla":
+        if self.layout == "sell" or self.cfg.backend == "xla":
             return dims[0]
         return dims[0] * self.cfg.block_rows
 
@@ -176,18 +201,44 @@ class _Pool:
         Serves three resize paths with one copy-and-pad: first admission,
         bucket growth (a larger problem arrives), and lane growth
         (admission after converged-lane compaction shrank the pool).
+
+        Matrix operands per layout: row-ELL grows in place (the old
+        slot-major region stays valid at any padded size because pad
+        columns are row-own ids); sliced-ELL *rebuilds* every lane from
+        the retained per-slot CSRs — the shared slice widths re-shuffle
+        the flat slot offsets, so an in-place copy has no meaning.  VM
+        *state* is layout-independent (original row order) and is always
+        copied forward.
         """
         S = self.slots
         vd = self.scheme.vector_dtype
         md = self.scheme.matrix_dtype
         n_pad = self._n_pad(dims)
         old_mat, old_state = self.mat, self.state
+        if len(self.req_of_slot) < S:
+            pad_n = S - len(self.req_of_slot)
+            self.req_of_slot += [None] * pad_n
+            self.csr_of_slot += [None] * pad_n
+            self.n_of_slot = np.pad(self.n_of_slot, (0, pad_n))
 
-        if self.cfg.backend == "xla":
+        if self.layout == "sell":
+            # Full rebuild at the pool's shared geometry; empty slots get
+            # a zero-nnz placeholder (self-gathering pad entries only).
+            empty = CSRMatrix(np.zeros(2, np.int64), np.zeros(0, np.int32),
+                              np.zeros(0, np.float64), (1, 1))
+            stacked = stack_sell(
+                [c if c is not None else empty for c in self.csr_of_slot],
+                n_pad=n_pad, widths=self.sell_widths, scheme=self.scheme)
+            self.groups = stacked.groups
+            mat = (jnp.asarray(stacked.cols), jnp.asarray(stacked.vals),
+                   jnp.asarray(stacked.iperm))
+        elif self.cfg.backend == "xla":
             N, W = dims
-            # zero padding entries are (col 0, val 0): harmless
-            mat = (jnp.zeros((S, N, W), jnp.int32),
-                   jnp.zeros((S, N, W), md))
+            idt = index_dtype(N)
+            # padding entries are (col i, val 0) for row i: self-gather,
+            # so no lane can be poisoned through another row's x entry
+            cols = jnp.broadcast_to(jnp.arange(N, dtype=idt), (S, W, N))
+            mat = (cols, jnp.zeros((S, W, N), md))
         else:
             B, T, L, _ = dims
             R = self.cfg.block_rows
@@ -213,7 +264,17 @@ class _Pool:
             def grow(new, old):
                 pads = [(0, n - o) for n, o in zip(new.shape, old.shape)]
                 return jnp.pad(old, pads)
-            mat = tuple(grow(n, o) for n, o in zip(mat, old_mat))
+            if self.layout == "sell":
+                pass            # mat fully rebuilt from the slot CSRs
+            elif self.cfg.backend == "xla":
+                # old slot-major [S0, W0, N0] region is valid verbatim;
+                # .set also casts int16 cols up if N crossed 2^15
+                mat = tuple(
+                    new.at[tuple(slice(0, d) for d in old.shape)]
+                    .set(old.astype(new.dtype))
+                    for new, old in zip(mat, old_mat))
+            else:
+                mat = tuple(grow(n, o) for n, o in zip(mat, old_mat))
             S_old = old_state.mem.shape[1]
             old_n = old_state.mem.shape[-1]
             mem = mem.at[:, :S_old, :old_n].set(old_state.mem)
@@ -225,10 +286,6 @@ class _Pool:
                 active=grow(state.active, old_state.active))
             tol = tol.at[:S_old].set(self.tol)
             maxiter_vec = maxiter_vec.at[:S_old].set(self.maxiter_vec)
-        if len(self.req_of_slot) < S:
-            self.req_of_slot += [None] * (S - len(self.req_of_slot))
-            self.n_of_slot = np.pad(self.n_of_slot,
-                                    (0, S - self.n_of_slot.shape[0]))
         self.bucket = dims
         self.mat = mat
         self.state = state
@@ -251,29 +308,72 @@ class _Pool:
         s = free[0]
         cfg = self.cfg
         a = _as_csr(a)
-        if cfg.backend == "xla":
-            cols_l, vals_l = csr_rowell(a)
-            dims = (bucket_up(a.shape[0]), bucket_up(cols_l.shape[1]))
+        if self.layout is None:
+            self.layout = choose_layout(
+                [a], default="rowell" if cfg.backend == "xla" else "ellpack")
+        if self.layout == "sell":
+            n_pad = bucket_up(a.shape[0])
+            if self.bucket is not None:
+                n_pad = max(n_pad, self.bucket[0])
+            stored = [c for c in self.csr_of_slot if c is not None]
+            wnew = sell_slice_widths(stored + [a], n_pad=n_pad)
+            if self.sell_widths is not None:
+                # n_pad growth appends zero-nnz rows, which a global sort
+                # sends to the tail: old slice widths stay valid for the
+                # leading slices, so the merge is a zero-padded max —
+                # widths only ever grow (bucket-signature stability).
+                old = self.sell_widths + (0,) * (len(wnew) -
+                                                 len(self.sell_widths))
+                wnew = tuple(max(o, w) for o, w in zip(old, wnew))
+            self.csr_of_slot[s] = a
+            if (self.bucket is None or n_pad != self.bucket[0]
+                    or wnew != self.sell_widths):
+                self.sell_widths = wnew
+                groups = _sell_groups(wnew, n_pad=n_pad,
+                                      slice_rows=max(1, min(SELL_SLICE_ROWS,
+                                                            n_pad)))
+                self._alloc((n_pad,) + tuple(
+                    d for rw in groups for d in rw))
+            else:
+                st1 = stack_sell([a], n_pad=n_pad, widths=self.sell_widths,
+                                 scheme=self.scheme)
+                lanes = (st1.cols[0], st1.vals[0], st1.iperm[0])
+                self.mat = tuple(
+                    arr.at[s].set(jnp.asarray(lane).astype(arr.dtype))
+                    for arr, lane in zip(self.mat, lanes))
         else:
-            m = csr_to_ellpack(a, block_rows=cfg.block_rows,
-                               col_tile=cfg.col_tile)
-            dims = tuple(bucket_up(d) for d in self._dims_of(m))
-        if self.bucket is None or any(d > o for d, o in
-                                      zip(dims, self.bucket)):
-            grown = dims if self.bucket is None else tuple(
-                max(d, o) for d, o in zip(dims, self.bucket))
-            self._alloc(grown)
-        if cfg.backend == "xla":
-            N, W = self.bucket
-            pads = ((0, N - cols_l.shape[0]), (0, W - cols_l.shape[1]))
-            lanes = (np.pad(cols_l, pads), np.pad(vals_l, pads))
-        else:
-            B, T, L, _ = self.bucket
-            m = pad_ellpack(m, n_row_blocks=B, n_slabs=T, ell=L)
-            lanes = (m.tile_cols, m.vals, m.local_cols)
-        self.mat = tuple(
-            arr.at[s].set(jnp.asarray(lane).astype(arr.dtype))
-            for arr, lane in zip(self.mat, lanes))
+            if cfg.backend == "xla":
+                cols_l, vals_l = csr_rowell(a)
+                dims = (bucket_up(a.shape[0]), bucket_up(cols_l.shape[1]))
+            else:
+                m = csr_to_ellpack(a, block_rows=cfg.block_rows,
+                                   col_tile=cfg.col_tile)
+                dims = tuple(bucket_up(d) for d in self._dims_of(m))
+            if self.bucket is None or any(d > o for d, o in
+                                          zip(dims, self.bucket)):
+                grown = dims if self.bucket is None else tuple(
+                    max(d, o) for d, o in zip(dims, self.bucket))
+                self._alloc(grown)
+            if cfg.backend == "xla":
+                # slot-major lane slab over the whole bucket: self-gather
+                # template, then the real entries transposed in
+                N, W = self.bucket
+                n, w_a = cols_l.shape
+                idt = index_dtype(N)
+                lane_cols = np.broadcast_to(np.arange(N, dtype=idt),
+                                            (W, N)).copy()
+                lane_cols[:w_a, :n] = cols_l.T
+                lane_vals = np.zeros((W, N), self.scheme.matrix_dtype)
+                lane_vals[:w_a, :n] = vals_l.T
+                lanes = (lane_cols, lane_vals)
+            else:
+                B, T, L, _ = self.bucket
+                m = pad_ellpack(m, n_row_blocks=B, n_slabs=T, ell=L)
+                lanes = (m.tile_cols, m.vals, m.local_cols)
+            self.csr_of_slot[s] = a
+            self.mat = tuple(
+                arr.at[s].set(jnp.asarray(lane).astype(arr.dtype))
+                for arr, lane in zip(self.mat, lanes))
 
         vd = self.scheme.vector_dtype
         n = a.shape[0]
@@ -289,7 +389,12 @@ class _Pool:
         b_l = jnp.asarray(bb, vd)
         x0_l = jnp.asarray(xx, vd)
 
-        if cfg.backend == "xla":
+        if self.layout == "sell":
+            lc, lv, lip = (arr[s] for arr in self.mat)
+            r, z, rz, rr = _lane_init_sell(
+                lc, lv, lip, diag_l, b_l, x0_l, groups=self.groups,
+                scheme=self.scheme)
+        elif cfg.backend == "xla":
             gc, v = (arr[s] for arr in self.mat)
             r, z, rz, rr = _lane_init_rowell(
                 gc, v, diag_l, b_l, x0_l, scheme=self.scheme)
@@ -323,12 +428,14 @@ class _Pool:
 
     def step(self) -> None:
         cfg = self.cfg
-        pallas = cfg.backend == "pallas"
+        ellpack = cfg.backend == "pallas" and self.layout != "sell"
+        index_bytes = int(self.mat[2 if ellpack else 0].dtype.itemsize)
         stepper_kw = dict(
             backend=cfg.backend, scheme=self.scheme, bucket=self.bucket,
-            chunk=cfg.chunk_iters, block_rows=cfg.block_rows,
+            chunk=cfg.chunk_iters, layout=self.layout, groups=self.groups,
+            index_bytes=index_bytes, block_rows=cfg.block_rows,
             col_tile=cfg.col_tile,
-            n_col_tiles=self.bucket[-1] if pallas else None,
+            n_col_tiles=self.bucket[-1] if ellpack else None,
             steps_per_sync=cfg.steps_per_sync, donate=cfg.donate,
             interpret=self.interpret)
         if cfg.specialize:
@@ -362,6 +469,9 @@ class _Pool:
                 residual_trace=None, scheme=self.scheme.name,
                 method=f"vm_engine[{self.policy}]")
             self.req_of_slot[s] = None
+            # release the CSR: a departed lane must not keep inflating
+            # future sell width merges (widths stay monotone regardless)
+            self.csr_of_slot[s] = None
         return done
 
     # --------------------------------------------------------- compaction
@@ -397,6 +507,7 @@ class _Pool:
         self.tol = self.tol[sel_j]
         self.maxiter_vec = self.maxiter_vec[sel_j]
         self.req_of_slot = [self.req_of_slot[s] for s in sel]
+        self.csr_of_slot = [self.csr_of_slot[s] for s in sel]
         self.n_of_slot = self.n_of_slot[sel]
         self.slots = target
         return True

@@ -18,22 +18,28 @@ from repro.sparse.generators import (
     poisson_3d,
     random_spd,
     diag_dominant_spd,
+    powerlaw_spd,
     tridiagonal_spd,
     benchmark_suite,
 )
 from repro.sparse.mtx import read_mtx, write_mtx
 from repro.sparse.partition import partition_rows, PartitionedMatrix
 from repro.sparse.stacking import (bucket_up, pad_bell, pad_ellpack,
-                                   stack_bell, stack_ellpack, StackedBell,
-                                   StackedEllpack)
+                                   stack_bell, stack_ellpack, stack_rowell,
+                                   stack_sell, StackedBell, StackedEllpack,
+                                   StackedRowEll, StackedSell, index_dtype,
+                                   index_bytes_for, rowell_padding_ratio,
+                                   choose_layout)
 
 __all__ = [
     "CSRMatrix", "csr_from_coo", "csr_to_dense", "csr_spmv",
     "BellMatrix", "csr_to_bell", "bell_spmv_reference",
     "poisson_2d", "poisson_3d", "random_spd", "diag_dominant_spd",
-    "tridiagonal_spd", "benchmark_suite",
+    "powerlaw_spd", "tridiagonal_spd", "benchmark_suite",
     "read_mtx", "write_mtx",
     "partition_rows", "PartitionedMatrix",
     "bucket_up", "pad_bell", "pad_ellpack", "stack_bell", "stack_ellpack",
-    "StackedBell", "StackedEllpack",
+    "stack_rowell", "stack_sell", "StackedBell", "StackedEllpack",
+    "StackedRowEll", "StackedSell", "index_dtype", "index_bytes_for",
+    "rowell_padding_ratio", "choose_layout",
 ]

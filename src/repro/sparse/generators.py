@@ -24,7 +24,7 @@ from repro.sparse.csr import CSRMatrix, csr_from_coo
 
 __all__ = [
     "poisson_2d", "poisson_3d", "tridiagonal_spd", "random_spd",
-    "diag_dominant_spd", "benchmark_suite",
+    "diag_dominant_spd", "powerlaw_spd", "benchmark_suite",
 ]
 
 
@@ -117,6 +117,46 @@ def diag_dominant_spd(n: int, nnz_per_row: int = 16, dominance: float = 1.05,
     return csr_from_coo(all_rows, all_cols, all_vals, (n, n))
 
 
+def powerlaw_spd(n: int, alpha: float = 2.2, min_deg: int = 2,
+                 max_deg: int | None = None, dominance: float = 1.2,
+                 seed: int = 0, dtype=np.float64) -> CSRMatrix:
+    """Power-law (skewed) degree SPD matrix — the sliced-ELL stress case.
+
+    Off-diagonal degree of row i is drawn from a truncated Pareto
+    (P(deg) ∝ deg^-alpha): most rows carry ``min_deg`` neighbors while a
+    few hub rows carry up to ``max_deg``, so the global max row width W
+    sits far above the mean and a global-W row-ELL layout pays padded
+    work/bytes ∝ n·W ≫ nnz (the regime where SELL-C-σ slicing wins).
+    Symmetrized and made diagonally dominant exactly like
+    :func:`diag_dominant_spd`.
+    """
+    rng = np.random.default_rng(seed)
+    max_deg = int(max_deg if max_deg is not None
+                  else max(min_deg + 1, n // 4))
+    u = rng.random(n)
+    deg = np.floor(min_deg * u ** (-1.0 / (alpha - 1.0))).astype(np.int64)
+    deg = np.clip(deg, min_deg, max_deg)
+    rows = np.repeat(np.arange(n), deg)
+    cols = rng.integers(0, n, size=rows.shape[0])
+    keep = rows != cols
+    rows, cols = rows[keep], cols[keep]
+    vals = rng.standard_normal(rows.shape[0])
+    # Symmetrize: add the transpose triplets.
+    rows_s = np.concatenate([rows, cols])
+    cols_s = np.concatenate([cols, rows])
+    vals_s = np.concatenate([vals, vals])
+    a = csr_from_coo(rows_s, cols_s, vals_s.astype(dtype), (n, n))
+    # Enforce diagonal dominance: diag = dominance * row abs-sum.
+    row_ids = np.repeat(np.arange(n), a.row_nnz())
+    abssum = np.bincount(row_ids, weights=np.abs(a.data), minlength=n)
+    diag_rows = np.arange(n)
+    diag_vals = dominance * np.maximum(abssum, 1e-8)
+    all_rows = np.concatenate([row_ids, diag_rows])
+    all_cols = np.concatenate([a.indices.astype(np.int64), diag_rows])
+    all_vals = np.concatenate([a.data, diag_vals.astype(dtype)])
+    return csr_from_coo(all_rows, all_cols, all_vals, (n, n))
+
+
 def random_spd(n: int, cond: float = 1e4, seed: int = 0,
                dtype=np.float64) -> CSRMatrix:
     """Dense-backed SPD with an exactly controlled condition number.
@@ -142,6 +182,7 @@ _SUITE: Dict[str, Tuple[Callable[..., CSRMatrix], dict, str]] = {
     "struct_med":     (diag_dominant_spd, dict(n=17361, nnz_per_row=58, dominance=1.08, seed=3), "gyro_k class"),
     "poisson2d_64":   (poisson_2d, dict(nx=64), "small thermal"),
     "poisson2d_132":  (poisson_2d, dict(nx=132), "bodyy4 class (17.5k)"),
+    "powerlaw_skew":  (powerlaw_spd, dict(n=4096, alpha=2.1, seed=5), "HBM-skew class (power-law degree)"),
     # Table 3 M19–M36 class: large rows, 2D/3D problems.
     "poisson2d_500":  (poisson_2d, dict(nx=500), "thermal mid (250k)"),
     "poisson2d_1000": (poisson_2d, dict(nx=1000), "ecology2 class (1.0M rows)"),
@@ -154,7 +195,7 @@ _SUITE: Dict[str, Tuple[Callable[..., CSRMatrix], dict, str]] = {
 def benchmark_suite(tier: str = "all") -> Dict[str, CSRMatrix]:
     """Materialize the named suite. tier ∈ {small, large, all}."""
     small = ["tri_small", "struct_easy", "struct_hard", "struct_med",
-             "poisson2d_64", "poisson2d_132"]
+             "poisson2d_64", "poisson2d_132", "powerlaw_skew"]
     large = ["poisson2d_500", "poisson2d_1000", "poisson3d_50",
              "poisson3d_100", "struct_large"]
     names = {"small": small, "large": large, "all": small + large}[tier]

@@ -111,15 +111,15 @@ def _vm_operands(probs, tol, scheme="mixed_v3"):
     """Replicate jpcg_solve_batched's xla operand packing (row-ELL) so
     runner / stepper state handling can be tested below the batch API.
     ``bk`` holds the runner kwargs; steppers additionally need the
-    bucket dims — ``mat[0].shape[1:]`` (= padded rows, row width)."""
+    bucket dims — ``mat[0].shape[1:]`` (= slot-major row width, padded
+    rows).  Values arrive packed at the scheme's at-rest matrix dtype."""
     import jax.numpy as jnp
 
     from repro.core.precision import get_scheme
     from repro.sparse.stacking import stack_rowell
     sch = get_scheme(scheme)
-    stacked = stack_rowell(list(probs), bucket=True)
-    mat = (jnp.asarray(stacked.cols),
-           jnp.asarray(stacked.vals).astype(sch.matrix_dtype))
+    stacked = stack_rowell(list(probs), bucket=True, scheme=sch)
+    mat = (jnp.asarray(stacked.cols), jnp.asarray(stacked.vals))
     vd = sch.vector_dtype
     G, n_pad = len(probs), stacked.padded_rows
     diag = np.ones((G, n_pad))

@@ -1,0 +1,304 @@
+"""Sliced-ELL (SELL-C-σ) layout — ISSUE 8.
+
+The layout contract under test: row-ELL, sliced-ELL (XLA and Pallas)
+and a plain-numpy reference produce **bit-identical** SpMV results for
+every precision scheme — the per-row slot order and the suffix-stable
+halving-tree bracketing are layout-invariant, so the solver trajectory
+cannot depend on which packing a bag happens to pick.  Plus the
+satellite guarantees: self-gathering padding (no cross-row poisoning),
+int16/int32 index-width selection at the 2^15 boundary, the
+padding-ratio auto heuristic on both front doors, and executable-cache
+splits on layout/index width.
+"""
+import numpy as np
+import pytest
+
+from repro.core.batch import (batched_matvec_rowell, batched_matvec_sell,
+                              jpcg_solve_batched, tree_sum)
+from repro.core.cg import jpcg_solve
+from repro.core.precision import get_scheme
+from repro.sparse import (diag_dominant_spd, poisson_2d, powerlaw_spd,
+                          tridiagonal_spd)
+from repro.sparse.stacking import (choose_layout, csr_rowell,
+                                   index_bytes_for, index_dtype,
+                                   rowell_padding_ratio, stack_rowell,
+                                   stack_sell)
+from repro.serve.solver_engine import SolverEngine, SolverEngineConfig
+from tests._hyp import given, settings, strategies as st
+
+BK = dict(block_rows=8, col_tile=128)
+
+#: The four schemes the property test sweeps: both faithful-tier mixes
+#: that differ in accumulate dtype, plus the fp64 baseline and the
+#: TPU-tier headline (bf16 values, fp32 gather/accumulate).
+SCHEMES4 = ("fp64", "mixed_v2", "mixed_v3", "tpu_v3")
+
+
+def _reference_spmv(csrs, xs, scheme):
+    """Plain-numpy oracle: per lane at its own *unbucketed* row width,
+    gather + correctly-rounded products + the same halving tree.  Any
+    padded width ≥ the row's nnz folds to identical bits (suffix-stable
+    bracketing), which is exactly what makes this a valid oracle for
+    both row-ELL (global W) and sliced-ELL (per-slice w)."""
+    sch = get_scheme(scheme)
+    mdt = np.dtype(sch.matrix_dtype)
+    idt = np.dtype(sch.spmv_in_dtype)
+    acc = np.dtype(sch.spmv_acc_dtype)
+    outs = []
+    for a, x in zip(csrs, xs):
+        cols, vals = csr_rowell(a)
+        v = vals.astype(mdt).astype(acc)
+        g = x.astype(idt)[cols].astype(acc)
+        # numpy's v*g is correctly rounded at acc — the same bits
+        # rounded_products pins down on the jax side
+        y = tree_sum(v * g, axis=1).astype(np.dtype(sch.vector_dtype))
+        outs.append(y)
+    return outs
+
+
+def _stacked_x(csrs, xs, n_pad, scheme):
+    sch = get_scheme(scheme)
+    xp = np.zeros((len(csrs), n_pad), np.dtype(sch.vector_dtype))
+    for g, x in enumerate(xs):
+        xp[g, : x.shape[0]] = x
+    return xp
+
+
+def _lane_equal(got, ref, csrs):
+    for g, (a, r) in enumerate(zip(csrs, ref)):
+        n = a.shape[0]
+        assert np.array_equal(np.asarray(got)[g, :n], np.asarray(r)[:n]), \
+            f"lane {g} differs from the reference"
+
+
+class TestLayoutBitIdentity:
+    """Property: rowell ≡ sell ≡ numpy CSR reference, bitwise, for every
+    scheme × backend, including power-law (skewed) row distributions."""
+
+    @settings(max_examples=8, deadline=None)
+    @given(n=st.integers(8, 160), alpha=st.floats(1.8, 2.6),
+           seed=st.integers(0, 9), scheme=st.sampled_from(SCHEMES4),
+           skewed=st.booleans(), pallas=st.booleans())
+    def test_spmv_layouts_bitwise_equal(self, n, alpha, seed, scheme,
+                                        skewed, pallas):
+        import jax.numpy as jnp
+        if skewed:
+            lanes = [powerlaw_spd(n, alpha=alpha, seed=seed),
+                     powerlaw_spd(max(5, n // 2), alpha=alpha,
+                                  seed=seed + 1)]
+        else:
+            lanes = [diag_dominant_spd(n, nnz_per_row=min(7, n - 1),
+                                       dominance=1.2, seed=seed),
+                     tridiagonal_spd(max(5, n // 2))]
+        sch = get_scheme(scheme)
+        rng = np.random.default_rng(seed)
+        xs = [rng.standard_normal(a.shape[0]) for a in lanes]
+        ref = _reference_spmv(lanes, xs, scheme)
+
+        st_r = stack_rowell(lanes, scheme=sch)
+        xp = _stacked_x(lanes, xs, st_r.padded_rows, scheme)
+        y_r = batched_matvec_rowell(jnp.asarray(st_r.cols),
+                                    jnp.asarray(st_r.vals),
+                                    jnp.asarray(xp), scheme=sch)
+        _lane_equal(y_r, ref, lanes)
+
+        st_s = stack_sell(lanes, scheme=sch)
+        y_s = batched_matvec_sell(jnp.asarray(st_s.cols),
+                                  jnp.asarray(st_s.vals),
+                                  jnp.asarray(st_s.iperm),
+                                  jnp.asarray(xp), groups=st_s.groups,
+                                  scheme=sch)
+        _lane_equal(y_s, ref, lanes)
+        assert np.array_equal(np.asarray(y_r), np.asarray(y_s)), \
+            "row-ELL and sliced-ELL disagree bitwise"
+
+        if pallas:
+            from repro.kernels.spmv import spmv_pallas_sell
+            y_sorted = spmv_pallas_sell(jnp.asarray(st_s.cols),
+                                        jnp.asarray(st_s.vals),
+                                        jnp.asarray(xp),
+                                        groups=st_s.groups, scheme=sch,
+                                        interpret=True)
+            y_p = jnp.take_along_axis(y_sorted, jnp.asarray(st_s.iperm),
+                                      axis=1).astype(sch.vector_dtype)
+            assert np.array_equal(np.asarray(y_p), np.asarray(y_s)), \
+                "Pallas sliced-ELL disagrees with the XLA path"
+
+
+class TestIndexWidth:
+    """int16 under the 2^15 bucketed-row boundary, int32 beyond — and
+    the packing stays bit-identical across the switch."""
+
+    def test_boundary_dtypes(self):
+        assert index_dtype(32767) == np.dtype(np.int16)
+        assert index_dtype(32768) == np.dtype(np.int32)
+        assert index_bytes_for(16384) == 2       # bucket edge itself
+        assert index_bytes_for(16385) == 4       # buckets to 32768
+        assert index_bytes_for(40000) == 4
+
+    @pytest.mark.parametrize("n,width", [(1000, 2), (33000, 4)])
+    def test_packed_index_width_and_identity(self, n, width):
+        import jax.numpy as jnp
+        a = tridiagonal_spd(n)
+        sch = get_scheme("mixed_v3")
+        st_r = stack_rowell([a], scheme=sch)
+        st_s = stack_sell([a], scheme=sch)
+        assert st_r.index_bytes == st_s.index_bytes == width
+        assert st_r.cols.dtype == st_s.cols.dtype == index_dtype(
+            st_r.padded_rows)
+        x = np.linspace(-1.0, 1.0, a.shape[0])
+        ref = _reference_spmv([a], [x], "mixed_v3")
+        xp = _stacked_x([a], [x], st_r.padded_rows, "mixed_v3")
+        y_r = batched_matvec_rowell(jnp.asarray(st_r.cols),
+                                    jnp.asarray(st_r.vals),
+                                    jnp.asarray(xp), scheme=sch)
+        y_s = batched_matvec_sell(jnp.asarray(st_s.cols),
+                                  jnp.asarray(st_s.vals),
+                                  jnp.asarray(st_s.iperm),
+                                  jnp.asarray(xp), groups=st_s.groups,
+                                  scheme=sch)
+        _lane_equal(y_r, ref, [a])
+        assert np.array_equal(np.asarray(y_r), np.asarray(y_s))
+
+
+class TestPaddingSelfGather:
+    """Satellite 1 regression: padded slots must gather the row's OWN x
+    entry (×0), never ``x[0]`` — a non-finite value in x[0] used to
+    poison every short row's result through its padding (0·inf = nan)."""
+
+    @pytest.mark.parametrize("stack", [stack_rowell, stack_sell])
+    def test_nonfinite_x0_cannot_poison_short_rows(self, stack):
+        import jax.numpy as jnp
+        a = powerlaw_spd(64, alpha=2.1, seed=3)   # skew: many short rows
+        sch = get_scheme("fp64")
+        stk = stack([a], scheme=sch)
+        x = np.ones(stk.padded_rows)
+        x[0] = np.inf
+        if stack is stack_rowell:
+            y = batched_matvec_rowell(jnp.asarray(stk.cols),
+                                      jnp.asarray(stk.vals),
+                                      jnp.asarray(x[None]), scheme=sch)
+        else:
+            y = batched_matvec_sell(jnp.asarray(stk.cols),
+                                    jnp.asarray(stk.vals),
+                                    jnp.asarray(stk.iperm),
+                                    jnp.asarray(x[None]), groups=stk.groups,
+                                    scheme=sch)
+        y = np.asarray(y)[0]
+        # rows with a structural entry in column 0 legitimately see inf;
+        # every OTHER row must stay finite
+        touches_0 = {int(r) for r in range(a.shape[0])
+                     for j in a.indices[a.indptr[r]:a.indptr[r + 1]]
+                     if j == 0}
+        clean = [r for r in range(a.shape[0]) if r not in touches_0]
+        assert clean, "test matrix degenerated: every row touches col 0"
+        assert np.all(np.isfinite(y[clean])), \
+            "padding gathered a foreign x entry (self-gather regression)"
+
+    def test_padded_slots_self_gather_by_construction(self):
+        a = tridiagonal_spd(10)                   # rows 0/9 are short
+        stk = stack_rowell([a], scheme=get_scheme("fp64"))
+        own = np.arange(stk.padded_rows)
+        pad = np.asarray(stk.vals[0]) == 0.0      # [W, n_pad] pad mask
+        cols = np.asarray(stk.cols[0], np.int64)
+        assert np.all(cols[pad] == np.broadcast_to(own, cols.shape)[pad])
+
+
+class TestFrontDoorWiring:
+    """layout= override + auto heuristic on both front doors, and the
+    executable-cache key splitting on the new fields."""
+
+    def test_heuristic_threshold(self):
+        skew = [powerlaw_spd(96, alpha=2.1, seed=0)]
+        flat = [tridiagonal_spd(96)]
+        assert rowell_padding_ratio(skew) > 2.0 > rowell_padding_ratio(flat)
+        assert choose_layout(skew) == "sell"
+        assert choose_layout(flat) == "rowell"
+        assert choose_layout(flat, default="ellpack") == "ellpack"
+
+    def test_batched_layout_override_and_auto(self):
+        skew = [powerlaw_spd(96, alpha=2.1, seed=0),
+                powerlaw_spd(80, alpha=2.2, seed=1)]
+        assert choose_layout(skew) == "sell"
+        kw = dict(tol=1e-10, maxiter=300, **BK)
+        oracle = jpcg_solve_batched(skew, engine="phases", layout="sell",
+                                    **kw)
+        for lay in ("rowell", "sell", "auto"):
+            got = jpcg_solve_batched(skew, layout=lay, **kw)
+            for r, o in zip(got, oracle):
+                assert r.iterations == o.iterations, lay
+                assert np.array_equal(np.asarray(r.x), np.asarray(o.x)), \
+                    f"layout={lay} not bit-identical to the phases oracle"
+
+    def test_executable_key_splits_on_layout_and_index_width(self):
+        from repro.core.compile import executable_key
+        base = dict(backend="xla", scheme="mixed_v3", bucket=(256, 8),
+                    steps_per_sync=8, donate=False, interpret=False)
+        keys = {executable_key("stepper", layout=lay, index_bytes=ib,
+                               **base)
+                for lay in ("rowell", "sell") for ib in (2, 4)}
+        assert len(keys) == 4
+
+    def test_engine_auto_layout_resolution(self):
+        eng = SolverEngine(SolverEngineConfig(batch_slots=2, chunk_iters=8,
+                                              **BK))
+        eng.submit(powerlaw_spd(128, alpha=2.1, seed=2))
+        assert eng._pool(None, None).layout == "sell"
+        eng.run_to_completion()
+        eng2 = SolverEngine(SolverEngineConfig(batch_slots=2, chunk_iters=8,
+                                               **BK))
+        eng2.submit(tridiagonal_spd(128))
+        assert eng2._pool(None, None).layout == "rowell"
+        eng2.run_to_completion()
+
+    def test_engine_sell_solve_and_growth(self):
+        """A sell pool admits, grows its bucket mid-flight (slice widths
+        merge monotonically), harvests — every lane matches the
+        single-system solver."""
+        eng = SolverEngine(SolverEngineConfig(batch_slots=4, chunk_iters=32,
+                                              layout="sell", **BK))
+        probs = {0: powerlaw_spd(200, alpha=2.1, seed=1),
+                 1: poisson_2d(12)}
+        ids = {k: eng.submit(a) for k, a in probs.items()}
+        eng.step()
+        probs[2] = powerlaw_spd(500, alpha=2.2, seed=2)   # bucket grows
+        ids[2] = eng.submit(probs[2])
+        eng.run_to_completion()
+        for k, a in probs.items():
+            ref = jpcg_solve(a, tol=1e-12, maxiter=20_000, **BK)
+            got = eng.results[ids[k]]
+            assert got.converged
+            assert abs(got.iterations - ref.iterations) <= 2
+            np.testing.assert_allclose(np.asarray(got.x), np.asarray(ref.x),
+                                       rtol=1e-6, atol=1e-8)
+
+
+class TestSolverParity:
+    """Solver-level acceptance: on a skewed bag the sell VM path is
+    bit-identical to the phases oracle for scheme × backend × chunking."""
+
+    SKEW = None
+
+    @classmethod
+    def _bag(cls):
+        if cls.SKEW is None:
+            cls.SKEW = [powerlaw_spd(128, alpha=2.1, seed=4),
+                        powerlaw_spd(96, alpha=2.3, seed=5)]
+        return cls.SKEW
+
+    @pytest.mark.parametrize("sps", [1, 8])
+    @pytest.mark.parametrize("scheme", ["fp64", "mixed_v3", "tpu_v3"])
+    def test_sell_vm_matches_phases(self, scheme, sps):
+        bag = self._bag()
+        kw = dict(tol=1e-8, maxiter=200, scheme=scheme,
+                  steps_per_sync=sps, **BK)
+        oracle = jpcg_solve_batched(bag, engine="phases", layout="sell",
+                                    **kw)
+        vm = jpcg_solve_batched(bag, engine="vm", layout="sell", **kw)
+        pal = jpcg_solve_batched(bag, engine="vm", layout="sell",
+                                 backend="pallas", interpret=True, **kw)
+        for o, v, p in zip(oracle, vm, pal):
+            assert v.iterations == o.iterations
+            assert p.iterations == o.iterations
+            assert np.array_equal(np.asarray(v.x), np.asarray(o.x))
+            assert np.array_equal(np.asarray(p.x), np.asarray(o.x))
