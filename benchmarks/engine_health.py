@@ -1,0 +1,151 @@
+"""Engine health: breakdown lifecycle + metrics accounting (ISSUE 9).
+
+Runs one :class:`repro.serve.SolverEngine` over a mixed bag — healthy
+SPD lanes, a deliberately *singular* operand (the all-ones matrix
+``J_n`` with a sum-zero rhs: ``ap = J·p = 0`` on the first search
+direction, so ``pAp = 0``), and a NaN-seeded rhs — and reports each
+request's structured exit next to the engine's observability snapshot.
+
+Two properties double as smoke-lane regression guards
+(``benchmarks/run.py --smoke``):
+
+* :func:`check_breakdown` — the singular lane exits
+  ``BREAKDOWN_INDEFINITE`` in **fewer than maxiter** iterations (before
+  the health layer it spun the full budget and returned garbage wearing
+  the MAXITER face);
+* :func:`check_bytes` — ``metrics()["bytes_streamed_est"]`` agrees with
+  an independent packed-array recompute — SpMV events (one warm-up per
+  admit + one per committed iteration + one discarded tick per mid-loop
+  breakdown) × the per-lane at-rest stream (values + indices, padding
+  included) — within :data:`BYTES_REL_ERR_MAX` (1%).  The bag is all
+  one size and the singular lane is admitted first, so the pool
+  geometry never grows mid-run and the two accountings must coincide.
+
+``python -m benchmarks.engine_health``
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import emit
+
+HEADER = ["request", "n", "scheme", "status", "iterations", "converged",
+          "retried", "bytes_streamed_est", "bytes_expected",
+          "bytes_rel_err"]
+
+#: Smoke guard: estimated vs packed-array-recomputed streamed bytes.
+BYTES_REL_ERR_MAX = 0.01
+
+_N = 32
+_MAXITER_POISON = 200
+
+
+def _singular():
+    """J_n (rank 1, eigenvalues {n, 0, ..., 0}) + a sum-zero rhs: the
+    warm-up is fine (diag is all ones), but the first search direction
+    lies in the nullspace — ``pAp = 0`` on tick 1."""
+    a = np.ones((_N, _N))
+    b = np.zeros(_N)
+    b[0], b[1] = 1.0, -1.0
+    return a, b
+
+
+def run(smoke: bool = False):
+    import jax
+    jax.config.update("jax_enable_x64", True)
+    from repro.serve.solver_engine import SolverEngine, SolverEngineConfig
+    from repro.sparse import tridiagonal_spd
+
+    cfg = SolverEngineConfig(batch_slots=8, chunk_iters=16,
+                             scheme="mixed_v3")
+    eng = SolverEngine(cfg)
+
+    names = {}
+    a_sing, b_sing = _singular()
+    # Singular lane first: it fixes the pool bucket at (n_pad, W) for
+    # the whole run (every problem is n=32), keeping the byte
+    # accounting exact — no mid-run geometry growth.
+    names[eng.submit(a_sing, b_sing, tol=1e-12,
+                     maxiter=_MAXITER_POISON)] = "singular_J32"
+    for i in range(4):
+        names[eng.submit(tridiagonal_spd(_N, diag=2.0 + 0.1 * i),
+                         tol=1e-12, maxiter=2000)] = f"healthy_{i}"
+    names[eng.submit(tridiagonal_spd(_N), np.full(_N, np.nan),
+                     tol=1e-12, maxiter=_MAXITER_POISON)] = "nan_rhs"
+
+    results = eng.run_to_completion()
+    snap = eng.metrics()
+
+    # Independent recompute from the packed arrays: every SpMV event
+    # streams one lane's at-rest nonzero arrays (values + indices,
+    # padding included).  Events: one warm-up per admit, one per
+    # committed iteration, one discarded tick per breakdown that
+    # happened *in-loop* — those freeze at their pre-tick (finite) rr,
+    # while a lane latched non-finite at admission never ticked.
+    pool = next(iter(eng._pools.values()))
+    lane_bytes = pool._lane_stream_bytes()
+    n_events = len(results)
+    for r in results.values():
+        n_events += r.iterations
+        if r.status in ("BREAKDOWN_INDEFINITE",
+                        "BREAKDOWN_NONFINITE") and np.isfinite(r.rr):
+            n_events += 1
+    expected = n_events * lane_bytes
+    est = snap["bytes_streamed_est"]
+    rel_err = abs(est - expected) / expected
+
+    rows = []
+    for rid, res in sorted(results.items()):
+        rows.append({
+            "request": names[rid], "n": _N, "scheme": res.scheme,
+            "status": res.status, "iterations": res.iterations,
+            "converged": res.converged, "retried": res.retried,
+        })
+    rows.append({
+        "request": "ENGINE_TOTALS", "n": _N, "scheme": cfg.scheme,
+        "status": "", "iterations": snap["iterations"], "converged": "",
+        "retried": "", "bytes_streamed_est": est,
+        "bytes_expected": expected, "bytes_rel_err": round(rel_err, 6),
+    })
+    emit(rows, HEADER)
+    print(f"# engine metrics: {snap}")
+    return rows
+
+
+def _poison_row(rows, name):
+    for r in rows:
+        if r["request"] == name:
+            return r
+    raise SystemExit(f"engine_health: no '{name}' row emitted")
+
+
+def check_breakdown(rows):
+    """Smoke guard: the singular lane must exit ``BREAKDOWN_INDEFINITE``
+    before its iteration budget — not spin to maxiter."""
+    r = _poison_row(rows, "singular_J32")
+    if r["status"] != "BREAKDOWN_INDEFINITE":
+        raise SystemExit(
+            f"engine_health: singular lane exited {r['status']!r}, "
+            f"expected BREAKDOWN_INDEFINITE")
+    if not r["iterations"] < _MAXITER_POISON:
+        raise SystemExit(
+            f"engine_health: singular lane burned its whole budget "
+            f"({r['iterations']} >= maxiter={_MAXITER_POISON}) — "
+            f"detection did not fire early")
+
+
+def check_bytes(rows):
+    """Smoke guard: metrics bytes-streamed vs packed-array accounting."""
+    r = _poison_row(rows, "ENGINE_TOTALS")
+    if r["bytes_rel_err"] > BYTES_REL_ERR_MAX:
+        raise SystemExit(
+            f"engine_health: bytes_streamed_est={r['bytes_streamed_est']} "
+            f"disagrees with packed-array accounting "
+            f"{r['bytes_expected']} by {r['bytes_rel_err']:.2%} "
+            f"(max {BYTES_REL_ERR_MAX:.0%})")
+
+
+if __name__ == "__main__":
+    rows = run()
+    check_breakdown(rows)
+    check_bytes(rows)

@@ -20,7 +20,11 @@ ISSUE-6 dispatch gap), if ``speedup`` over ``python_loop`` drops below
 batched-loop gap), or if sliced-ELL's throughput on the skewed
 power-law bag falls below ``SELL_SPEEDUP_MIN`` of row-ELL's (the
 ISSUE-8 layout guard — all floors are recorded in the section's JSON
-``meta``).
+``meta``).  The ``engine_health`` section adds two more (ISSUE 9): a
+deliberately-singular lane must exit ``BREAKDOWN_INDEFINITE`` in fewer
+than maxiter iterations, and the engine's ``bytes_streamed_est`` metric
+must agree with the packed-array accounting within
+``benchmarks.engine_health.BYTES_REL_ERR_MAX`` (1%).
 
 ``--profile DIR`` wraps every section in a ``jax.profiler`` trace
 (``benchmarks.common.profile_trace``) written under ``DIR/<section>``
@@ -48,10 +52,10 @@ def main(argv=None):
     import jax
     jax.config.update("jax_enable_x64", True)
 
-    from benchmarks import (batched_solver, fig9_residual_traces,
-                            roofline_table, spmv_kernel, tab4_solver_time,
-                            tab5_throughput, tab7_iterations,
-                            vsr_access_counts)
+    from benchmarks import (batched_solver, engine_health,
+                            fig9_residual_traces, roofline_table,
+                            spmv_kernel, tab4_solver_time, tab5_throughput,
+                            tab7_iterations, vsr_access_counts)
     from benchmarks.common import profile_trace, write_bench_json
 
     sections = [
@@ -73,9 +77,12 @@ def main(argv=None):
         ("batched_solver",
          "Batched solver: systems/sec + stream-VM overhead",
          batched_solver.run, {"smoke": args.smoke}),
+        ("engine_health",
+         "Engine health: breakdown lifecycle + metrics accounting",
+         engine_health.run, {"smoke": args.smoke}),
     ]
     if args.smoke:
-        keep = {"vsr_access_counts", "batched_solver"}
+        keep = {"vsr_access_counts", "batched_solver", "engine_health"}
         sections = [s for s in sections if s[0] in keep]
 
     failures = []
@@ -96,14 +103,21 @@ def main(argv=None):
                 meta["sell_bytes_reduction_min"] = (
                     batched_solver.SELL_BYTES_REDUCTION_MIN)
                 meta["steps_per_sync"] = batched_solver.STEPS_PER_SYNC
+            if name == "engine_health":
+                meta["bytes_rel_err_max"] = engine_health.BYTES_REL_ERR_MAX
             write_bench_json(name, rows, meta=meta)
         print(f"--- ({elapsed:.1f}s)")
-        if name == "batched_solver" and args.smoke:
+        if args.smoke:
             # Regression guards (after the JSON is persisted, so a
             # failing run still uploads its numbers as a CI artifact).
-            for guard in (batched_solver.check_vm_overhead,
-                          batched_solver.check_spec_speedup,
-                          batched_solver.check_sell_speedup):
+            guards = {
+                "batched_solver": (batched_solver.check_vm_overhead,
+                                   batched_solver.check_spec_speedup,
+                                   batched_solver.check_sell_speedup),
+                "engine_health": (engine_health.check_breakdown,
+                                  engine_health.check_bytes),
+            }.get(name, ())
+            for guard in guards:
                 try:
                     guard(rows)
                 except SystemExit as e:

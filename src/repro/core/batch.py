@@ -76,6 +76,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.cg import CGResult
+from repro.core.metrics import (advance_status, finalize_status,
+                                initial_status, is_breakdown,
+                                solver_metrics, status_name, tick_health)
 from repro.core.phases import vsr_iteration
 from repro.core.precision import PrecisionScheme, get_scheme
 from repro.sparse.csr import CSRMatrix, csr_from_coo
@@ -94,6 +97,7 @@ class BatchedCGState(NamedTuple):
 
     k: jax.Array        # global loop counter (int32 scalar)
     it: jax.Array       # int32[G] per-lane iteration counts
+    status: jax.Array   # int32[G] exit codes (repro.core.metrics.STATUS_*)
     x: jax.Array        # [G, n] solutions (frozen once a lane converges)
     r: jax.Array        # [G, n] residuals
     p: jax.Array        # [G, n] search directions
@@ -277,7 +281,7 @@ def batched_matvec_ellpack(tile_cols, vals, local_cols, x, *,
 
 # ------------------------------------------------------- loop construction
 def _batched_init(matvec, diag, b, x0, *, maxiter, scheme, with_trace,
-                  tol):
+                  tol, detect=True):
     vd = scheme.vector_dtype
     G = b.shape[0]
     r = b - matvec(x0)
@@ -288,11 +292,12 @@ def _batched_init(matvec, diag, b, x0, *, maxiter, scheme, with_trace,
     trace = jnp.zeros((G, maxiter if with_trace else 0), dtype=vd)
     return BatchedCGState(
         k=jnp.zeros((), jnp.int32), it=jnp.zeros(G, jnp.int32),
+        status=initial_status(rr, tol, detect=detect),
         x=x0, r=r, p=p, rz=rz, rr=rr, active=rr > tol, trace=trace)
 
 
 def _batched_body(matvec, diag, tol, maxiter_vec=None, *, bound=None,
-                  write_trace=True):
+                  write_trace=True, detect=True):
     """Masked VSR iteration over all lanes.
 
     Frozen (converged) lanes still flow through the arithmetic — that is
@@ -310,37 +315,54 @@ def _batched_body(matvec, diag, tol, maxiter_vec=None, *, bound=None,
     *every* observable, including iteration counts.  ``write_trace=False``
     suppresses the per-tick trace scatter (the chunked runner hoists it
     to one blend per chunk).
+
+    ``detect`` arms in-loop breakdown detection
+    (:func:`repro.core.metrics.tick_health` on the tick's own
+    ``pAp``/``α``/``β``/``rr`` — no extra arithmetic): a lane that trips
+    it freezes *this* tick — writes discarded, ``it`` not advanced,
+    ``status`` latched to the breakdown code, lane deactivated.  Healthy
+    lanes see the identical dataflow with or without detection (the
+    commit mask degenerates to ``keep``), which ``tests/test_health.py``
+    locks bit-for-bit.
     """
 
     def body(s: BatchedCGState) -> BatchedCGState:
-        x_new, r_new, p_new, rz_new, rr_new = vsr_iteration(
-            matvec, diag, s.x, s.r, s.p, s.rz, dot=_row_dot)
+        x_new, r_new, p_new, rz_new, rr_new, (pap, alpha, beta) = \
+            vsr_iteration(matvec, diag, s.x, s.r, s.p, s.rz, dot=_row_dot,
+                          with_aux=True)
         go = jnp.any(s.active)
         if bound is not None:
             go = go & (s.k < bound)
         keep = s.active & go
-        kv = keep[:, None]
+        upd, bd_i, bd_n = tick_health(keep, pap, alpha, beta, rr_new,
+                                      detect=detect)
+        kv = upd[:, None]
         x = jnp.where(kv, x_new, s.x)
         r = jnp.where(kv, r_new, s.r)
         p = jnp.where(kv, p_new, s.p)
-        rz = jnp.where(keep, rz_new, s.rz)
-        rr = jnp.where(keep, rr_new, s.rr)
-        it = s.it + keep.astype(jnp.int32)
+        rz = jnp.where(upd, rz_new, s.rz)
+        rr = jnp.where(upd, rr_new, s.rr)
+        it = s.it + upd.astype(jnp.int32)
         if write_trace and s.trace.shape[1]:
             safe_k = jnp.minimum(s.k, s.trace.shape[1] - 1)
             trace = s.trace.at[:, safe_k].set(
-                jnp.where(keep & (s.k < s.trace.shape[1]), rr_new,
+                jnp.where(upd & (s.k < s.trace.shape[1]), rr_new,
                           s.trace[:, safe_k]))
         else:
             trace = s.trace
         live = rr > tol
         if maxiter_vec is not None:
             live = live & (it < maxiter_vec)
+        if detect:
+            live = live & ~(bd_i | bd_n)
+        status = advance_status(s.status, upd=upd, bd_indef=bd_i,
+                                bd_nonf=bd_n, rr_new=rr_new, tol=tol,
+                                it=it, maxiter_vec=maxiter_vec)
         # a no-op tick (go=False) must not re-evaluate liveness
         active = jnp.where(keep, live, s.active)
-        return BatchedCGState(k=s.k + go.astype(jnp.int32), it=it, x=x,
-                              r=r, p=p, rz=rz, rr=rr, active=active,
-                              trace=trace)
+        return BatchedCGState(k=s.k + go.astype(jnp.int32), it=it,
+                              status=status, x=x, r=r, p=p, rz=rz, rr=rr,
+                              active=active, trace=trace)
 
     return body
 
@@ -480,13 +502,17 @@ def _matvec_factory(*, backend, scheme, layout=None, groups=None,
 def _make_runner(*, backend, scheme, maxiter, with_trace, layout=None,
                  groups=None, block_rows=None, col_tile=None,
                  n_col_tiles=None, steps_per_sync=8, donate=False,
-                 interpret=False):
+                 detect=True, interpret=False):
     """Build the jitted solve-to-completion runner for one bucket shape.
 
     ``steps_per_sync`` = iterations per termination-predicate sync (the
     chunking knob; bit-identical for any value).  ``donate`` marks the
     ``b``/``x0`` operands donated (off by default — see
-    :func:`jpcg_solve_batched`).
+    :func:`jpcg_solve_batched`).  ``detect`` arms breakdown detection
+    (see :func:`_batched_body`); either way leftover ``RUNNING`` statuses
+    are finalized to ``MAXITER`` before the state is returned — a solve
+    runner's loop only exits with everything terminal or the budget
+    spent.
     """
     matvec_of = _matvec_factory(
         backend=backend, scheme=scheme, layout=layout, groups=groups,
@@ -497,16 +523,18 @@ def _make_runner(*, backend, scheme, maxiter, with_trace, layout=None,
     def run(mat, diag, b, x0, tol):
         matvec = matvec_of(mat)
         st = _batched_init(matvec, diag, b, x0, maxiter=maxiter,
-                           scheme=scheme, with_trace=with_trace, tol=tol)
+                           scheme=scheme, with_trace=with_trace, tol=tol,
+                           detect=detect)
         tick = _batched_body(matvec, diag, tol, bound=maxiter,
-                             write_trace=not hoist_trace)
+                             write_trace=not hoist_trace, detect=detect)
 
         def cond(s):
             return (s.k < maxiter) & jnp.any(s.active)
 
-        return _run_chunked(cond, tick, st, steps=steps_per_sync,
-                            with_trace=with_trace, maxiter=maxiter,
-                            rr_of=lambda s: s.rr)
+        out = _run_chunked(cond, tick, st, steps=steps_per_sync,
+                           with_trace=with_trace, maxiter=maxiter,
+                           rr_of=lambda s: s.rr)
+        return out._replace(status=finalize_status(out.status))
 
     return jax.jit(run, donate_argnums=(2, 3) if donate else ())
 
@@ -541,6 +569,7 @@ def jpcg_solve_batched(problems: Sequence, bs: Optional[Sequence] = None,
                        bucket: bool = True, layout: str = "auto",
                        with_trace: bool = False,
                        steps_per_sync: int = 8, donate: bool = False,
+                       detect: bool = True, with_status: bool = True,
                        interpret: Optional[bool] = None) -> List[CGResult]:
     """Solve B independent SPD systems in one compiled ``lax.while_loop``.
 
@@ -579,6 +608,19 @@ def jpcg_solve_batched(problems: Sequence, bs: Optional[Sequence] = None,
     stacking time; the layout and index width join the executable cache
     key.  Every layout is bit-identical to every other for the same
     scheme (shared :func:`tree_sum` reduction bracketing).
+
+    ``detect`` (default True; static, joins the cache key) arms in-loop
+    breakdown detection: a lane whose tick produces ``pAp ≤ 0`` or a
+    non-finite ``rr``/``α``/``β`` freezes immediately with a breakdown
+    status instead of spinning to ``maxiter`` — bit-invisible to healthy
+    lanes (see :mod:`repro.core.metrics`).  ``with_status`` (default
+    True) reports each lane's exit as ``CGResult.status``
+    (``"CONVERGED"`` / ``"MAXITER"`` / ``"BREAKDOWN_INDEFINITE"`` /
+    ``"BREAKDOWN_NONFINITE"``); ``with_status=False`` restores the
+    legacy ``status=None`` result for callers that compare results
+    structurally.  Each call also feeds the process-wide
+    :func:`repro.core.metrics.solver_metrics` counters (iterations,
+    SpMV-call and streamed-byte estimates, exit histogram).
     """
     if engine != "vm" and (policy is not None or program is not None):
         raise ValueError(
@@ -687,12 +729,12 @@ def jpcg_solve_batched(problems: Sequence, bs: Optional[Sequence] = None,
             with_trace=with_trace, layout=layout, groups=groups,
             block_rows=block_rows, col_tile=col_tile,
             n_col_tiles=n_col_tiles, steps_per_sync=steps_per_sync,
-            donate=donate, interpret=interpret)
+            donate=donate, detect=detect, interpret=interpret)
         key_kw = dict(
             backend=backend, scheme=scheme.name, batch=G,
             bucket=bucket_dims, layout=layout, index_bytes=index_bytes,
             maxiter=maxiter, with_trace=with_trace,
-            steps_per_sync=steps_per_sync, donate=donate,
+            steps_per_sync=steps_per_sync, donate=donate, detect=detect,
             interpret=interpret)
         if specialize:
             key = executable_key("vm_solve_spec", program=prog_np,
@@ -712,14 +754,14 @@ def jpcg_solve_batched(problems: Sequence, bs: Optional[Sequence] = None,
             "solve", backend=backend, scheme=scheme.name, batch=G,
             bucket=bucket_dims, layout=layout, index_bytes=index_bytes,
             maxiter=maxiter, with_trace=with_trace,
-            steps_per_sync=steps_per_sync, donate=donate,
+            steps_per_sync=steps_per_sync, donate=donate, detect=detect,
             interpret=interpret)
         run = _cached(key, lambda: _make_runner(
             backend=backend, scheme=scheme, maxiter=maxiter,
             with_trace=with_trace, layout=layout, groups=groups,
             block_rows=block_rows, col_tile=col_tile,
             n_col_tiles=n_col_tiles, steps_per_sync=steps_per_sync,
-            donate=donate, interpret=interpret))
+            donate=donate, detect=detect, interpret=interpret))
         st = run(mat, diag, b, x0, tol_vec)
         xs, rrs_dev, trace_dev = st.x, st.rr, st.trace
         method = "vsr_batched"
@@ -729,11 +771,38 @@ def jpcg_solve_batched(problems: Sequence, bs: Optional[Sequence] = None,
     its = np.asarray(st.it)
     rrs = np.asarray(rrs_dev)
     tols = np.asarray(tol_vec)
+    statuses = np.asarray(st.status)
+
+    # Observability (estimates, host-side): one SpMV per warm-up, per
+    # committed iteration, and per discarded breakdown tick; streamed
+    # bytes = events x the lane's at-rest nonzero stream (values +
+    # indices as packed — padding already included, so this IS
+    # nonzero_stream_bytes x padding_ratio x nnz).
+    m = solver_metrics()
+    if layout == "ellpack":
+        lane_stream_bytes = (mat[1].nbytes + mat[2].nbytes) // G
+    else:
+        lane_stream_bytes = (mat[0].nbytes + mat[1].nbytes) // G
+    # A breakdown lane spent one discarded tick iff it actually entered
+    # the loop: an in-loop breakdown freezes at its pre-tick rr (always
+    # finite), while a lane latched non-finite at admission keeps its
+    # non-finite warm-up rr and never ticked.
+    n_bd = int(sum(is_breakdown(int(c)) and np.isfinite(rrs[g])
+                   for g, c in enumerate(statuses)))
+    spmv_events = G + int(its.sum()) + n_bd
+    m.bump("solves")
+    m.bump("lanes", G)
+    m.bump("iterations", int(its.sum()))
+    m.bump("spmv_calls", spmv_events)
+    m.bump("bytes_streamed_est", spmv_events * int(lane_stream_bytes))
+    m.record_exits(statuses)
+
     results = []
     for g in range(G):
         trace = (np.asarray(trace_dev[g])[: its[g]] if with_trace else None)
         results.append(CGResult(
             x=xs[g, : ns[g]], iterations=int(its[g]), rr=float(rrs[g]),
             converged=bool(rrs[g] <= tols[g]), residual_trace=trace,
-            scheme=scheme.name, method=method))
+            scheme=scheme.name, method=method,
+            status=status_name(int(statuses[g])) if with_status else None))
     return results

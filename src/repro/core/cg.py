@@ -64,11 +64,20 @@ class CGResult:
     residual_trace: Optional[np.ndarray]   # rr per iteration, if requested
     scheme: str
     method: str
+    # Exit status name (repro.core.metrics.STATUS_NAMES): "CONVERGED" /
+    # "MAXITER" / "BREAKDOWN_INDEFINITE" / "BREAKDOWN_NONFINITE"; None
+    # from paths that predate the health layer or with_status=False.
+    status: Optional[str] = None
+    # True when the serving engine's escalation policy re-ran this
+    # request at fp64 after a mixed-precision breakdown.
+    retried: bool = False
 
     def __repr__(self) -> str:  # keep array printing out of logs
+        extra = f", status={self.status}" if self.status else ""
+        extra += ", retried" if self.retried else ""
         return (f"CGResult(iters={self.iterations}, rr={self.rr:.3e}, "
                 f"converged={self.converged}, scheme={self.scheme}, "
-                f"method={self.method})")
+                f"method={self.method}{extra})")
 
 
 @partial(jax.jit, static_argnames=("tol", "maxiter", "scheme", "with_trace",

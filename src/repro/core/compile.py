@@ -397,6 +397,7 @@ def executable_key(kind: str, *, backend: str, scheme: str, bucket,
                    maxiter: Optional[int] = None,
                    chunk: Optional[int] = None,
                    with_trace: Optional[bool] = None,
+                   detect: Optional[bool] = None,
                    program: Optional[np.ndarray] = None) -> tuple:
     """Canonical executable-cache key for VM/phases runners and steppers.
 
@@ -424,6 +425,10 @@ def executable_key(kind: str, *, backend: str, scheme: str, bucket,
     ``steps_per_sync``        iteration-chunking factor — baked into the loop
                               body structure (ISSUE 7)
     ``donate``                donation changes the jit wrapper, not just args
+    ``detect``                breakdown detection adds status compares/selects
+                              to the loop body (ISSUE 9); the carried
+                              ``status`` vector itself is key-neutral — both
+                              variants carry it
     ``interpret``             Pallas interpreter vs compiled kernel
     ``program``               folded to :func:`repro.core.isa.program_token`;
                               only present for *specialized* executables —
@@ -433,7 +438,8 @@ def executable_key(kind: str, *, backend: str, scheme: str, bucket,
     """
     key = (kind, backend, scheme, batch, tuple(np.ravel(bucket).tolist()),
            layout, index_bytes, maxiter, chunk, with_trace,
-           int(steps_per_sync), bool(donate), bool(interpret))
+           int(steps_per_sync), bool(donate),
+           None if detect is None else bool(detect), bool(interpret))
     if program is not None:
         key += (program_token(np.asarray(program, np.int32)),)
     return key

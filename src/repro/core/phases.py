@@ -56,7 +56,7 @@ def _dot(a: jax.Array, b: jax.Array) -> jax.Array:
     return jnp.dot(a, b)
 
 
-def vsr_iteration(matvec, diag, x, r, p, rz, *, dot=_dot):
+def vsr_iteration(matvec, diag, x, r, p, rz, *, dot=_dot, with_aux=False):
     """One VSR-scheduled JPCG iteration (phases 1–3) on raw vectors.
 
     Shared by the single-system loop below and the batched engine
@@ -64,7 +64,10 @@ def vsr_iteration(matvec, diag, x, r, p, rz, *, dot=_dot):
     vectors carrying a leading batch axis — the phase dataflow is
     literally the same code, so the two paths cannot drift.
 
-    Returns ``(x', r', p', rz', rr')``.
+    Returns ``(x', r', p', rz', rr')``; with ``with_aux`` the tick's
+    internal scalars ``(pap, alpha, beta)`` ride along as a sixth
+    element so breakdown detection (:mod:`repro.core.metrics`) can
+    classify the tick without recomputing anything.
     """
     # ---- Phase 1: M1 (SpMV), M2 (dot) -> alpha ----
     ap = matvec(p)
@@ -81,6 +84,8 @@ def vsr_iteration(matvec, diag, x, r, p, rz, *, dot=_dot):
     # ---- Phase 3: M7, M3 ----
     p_new = z + be * p
     x_new = x + al * p
+    if with_aux:
+        return x_new, r_new, p_new, rz_new, rr_new, (pap, alpha, beta)
     return x_new, r_new, p_new, rz_new, rr_new
 
 

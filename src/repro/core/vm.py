@@ -69,6 +69,8 @@ from repro.core.batch import _cached, _matvec_factory, _row_dot, _run_chunked
 from repro.core.compile import executable_key
 from repro.core.isa import (BUF, CTRL_ALPHA, ITYPE_COMP, ITYPE_CTRL,
                             ITYPE_VCTRL, SREG)
+from repro.core.metrics import (advance_status, finalize_status,
+                                initial_status, tick_health)
 from repro.core.precision import get_scheme
 
 __all__ = ["BatchedVMState", "make_vm_runner", "make_vm_stepper",
@@ -88,6 +90,7 @@ class BatchedVMState(NamedTuple):
 
     k: jax.Array         # global tick (int32 scalar)
     it: jax.Array        # int32[G] per-lane iteration counts
+    status: jax.Array    # int32[G] exit codes (repro.core.metrics.STATUS_*)
     mem: jax.Array       # [6, G, n] HBM vector buffers (x r p ap M b)
     queues: jax.Array    # [8, G, n] inter-module streams
     sregs: jax.Array     # [6, G] scalar registers (α β rz rr pap rz')
@@ -178,7 +181,7 @@ def _make_executor(matvec):
 
 
 def vm_init(matvec, diag, b, x0, *, maxiter: int, with_trace: bool,
-            tol) -> BatchedVMState:
+            tol, detect: bool = True) -> BatchedVMState:
     """Controller warm-up (paper Alg. 1 lines 1–5) — arithmetic identical
     to :func:`repro.core.batch._batched_init`, packed into VM buffers."""
     vd = b.dtype
@@ -191,14 +194,15 @@ def vm_init(matvec, diag, b, x0, *, maxiter: int, with_trace: bool,
     sregs = jnp.zeros((_N_SREGS, G), vd)
     sregs = sregs.at[SREG["rz"]].set(rz).at[SREG["rr"]].set(rr)
     return BatchedVMState(
-        k=jnp.zeros((), jnp.int32), it=jnp.zeros(G, jnp.int32), mem=mem,
+        k=jnp.zeros((), jnp.int32), it=jnp.zeros(G, jnp.int32),
+        status=initial_status(rr, tol, detect=detect), mem=mem,
         queues=jnp.zeros((_N_QUEUES,) + r.shape, vd), sregs=sregs,
         active=rr > tol,
         trace=jnp.zeros((G, maxiter if with_trace else 0), vd))
 
 
 def _vm_body(program, matvec, tol, maxiter_vec=None, *, bound=None,
-             write_trace=True):
+             write_trace=True, detect=True):
     """One VM tick = run the program once = one JPCG iteration per lane.
 
     Frozen (converged) lanes flow through the arithmetic — dead compute
@@ -213,6 +217,14 @@ def _vm_body(program, matvec, tol, maxiter_vec=None, *, bound=None,
     whole tick is a no-op once every lane converged or ``k`` reached
     ``bound``), and the chunked with-trace runner hoists the trace
     scatter out of the tick.
+
+    ``detect`` reads the tick's *candidate* scalar registers (``pap`` /
+    ``alpha`` / ``beta`` / ``rr`` — every canonical program writes them;
+    a custom program that doesn't must run with ``detect=False``) through
+    :func:`repro.core.metrics.tick_health`: a lane that trips it discards
+    the whole tick — ``mem``/``queues``/``sregs`` untouched, ``it`` not
+    advanced — and latches its breakdown ``status``.  Masking semantics
+    stay word-for-word identical to :func:`repro.core.batch._batched_body`.
     """
     execute = _make_executor(matvec)
 
@@ -225,23 +237,31 @@ def _vm_body(program, matvec, tol, maxiter_vec=None, *, bound=None,
         if bound is not None:
             go = go & (st.k < bound)
         keep = st.active & go
-        mem = jnp.where(keep[None, :, None], nxt.mem, st.mem)
-        queues = jnp.where(keep[None, :, None], nxt.queues, st.queues)
-        sregs = jnp.where(keep[None, :], nxt.sregs, st.sregs)
-        it = st.it + keep.astype(jnp.int32)
+        rr_cand = nxt.sregs[SREG["rr"]]
+        upd, bd_i, bd_n = tick_health(
+            keep, nxt.sregs[SREG["pap"]], nxt.sregs[SREG["alpha"]],
+            nxt.sregs[SREG["beta"]], rr_cand, detect=detect)
+        mem = jnp.where(upd[None, :, None], nxt.mem, st.mem)
+        queues = jnp.where(upd[None, :, None], nxt.queues, st.queues)
+        sregs = jnp.where(upd[None, :], nxt.sregs, st.sregs)
+        it = st.it + upd.astype(jnp.int32)
         rr = sregs[SREG["rr"]]
         if write_trace:
-            trace = _masked_trace(st.trace, st.k, keep,
-                                  nxt.sregs[SREG["rr"]])
+            trace = _masked_trace(st.trace, st.k, upd, rr_cand)
         else:
             trace = st.trace
         live = rr > tol
         if maxiter_vec is not None:
             live = live & (it < maxiter_vec)
+        if detect:
+            live = live & ~(bd_i | bd_n)
+        status = advance_status(st.status, upd=upd, bd_indef=bd_i,
+                                bd_nonf=bd_n, rr_new=rr_cand, tol=tol,
+                                it=it, maxiter_vec=maxiter_vec)
         active = jnp.where(keep, live, st.active)
         return BatchedVMState(k=st.k + go.astype(jnp.int32), it=it,
-                              mem=mem, queues=queues, sregs=sregs,
-                              active=active, trace=trace)
+                              status=status, mem=mem, queues=queues,
+                              sregs=sregs, active=active, trace=trace)
 
     return body
 
@@ -375,6 +395,7 @@ class _SpecCarry(NamedTuple):
 
     k: jax.Array
     it: jax.Array
+    status: jax.Array
     mem: Tuple[jax.Array, ...]       # carried buffers only, [G, n] each
     queues: Tuple[jax.Array, ...]    # live-in queues only, [G, n] each
     sregs: jax.Array
@@ -384,7 +405,7 @@ class _SpecCarry(NamedTuple):
 
 def _spec_carry_of(st: BatchedVMState, plan: _ProgramPlan) -> _SpecCarry:
     return _SpecCarry(
-        k=st.k, it=st.it,
+        k=st.k, it=st.it, status=st.status,
         mem=tuple(st.mem[i] for i in plan.carried_bufs),
         queues=tuple(st.queues[q] for q in plan.live_queues),
         sregs=st.sregs, active=st.active, trace=st.trace)
@@ -407,17 +428,20 @@ def _state_of_spec_carry(c: _SpecCarry, st0: BatchedVMState,
     queues = st0.queues
     for q, v in zip(plan.live_queues, c.queues):
         queues = queues.at[q].set(v)
-    return BatchedVMState(k=c.k, it=c.it, mem=mem,
+    return BatchedVMState(k=c.k, it=c.it, status=c.status, mem=mem,
                           queues=queues, sregs=c.sregs, active=c.active,
                           trace=c.trace)
 
 
 def _spec_body(plan: _ProgramPlan, matvec, tol, maxiter_vec=None, *,
-               bound=None, write_trace=True):
+               bound=None, write_trace=True, detect=True):
     """Specialized VM tick — identical masking semantics to
     :func:`_vm_body`, applied per carried buffer/queue; ``bound`` makes
     the tick self-gating for chunked execution (see
-    :func:`repro.core.batch._batched_body`)."""
+    :func:`repro.core.batch._batched_body`); ``detect`` classifies the
+    same candidate scalar registers through the same
+    :func:`repro.core.metrics.tick_health`, so the two VM paths stay
+    guaranteed-identical with detection on or off."""
     wb = frozenset(plan.written_bufs)
     wq = frozenset(plan.written_queues)
 
@@ -430,25 +454,34 @@ def _spec_body(plan: _ProgramPlan, matvec, tol, maxiter_vec=None, *,
         if bound is not None:
             go = go & (c.k < bound)
         keep = c.active & go
-        kv = keep[:, None]
+        rr_cand = n_sregs[SREG["rr"]]
+        upd, bd_i, bd_n = tick_health(
+            keep, n_sregs[SREG["pap"]], n_sregs[SREG["alpha"]],
+            n_sregs[SREG["beta"]], rr_cand, detect=detect)
+        kv = upd[:, None]
         mem = tuple(jnp.where(kv, n_mem[i], old) if i in wb else old
                     for i, old in zip(plan.carried_bufs, c.mem))
         queues = tuple(jnp.where(kv, n_q[q], old) if q in wq else old
                        for q, old in zip(plan.live_queues, c.queues))
-        sregs = jnp.where(keep[None, :], n_sregs, c.sregs)
-        it = c.it + keep.astype(jnp.int32)
+        sregs = jnp.where(upd[None, :], n_sregs, c.sregs)
+        it = c.it + upd.astype(jnp.int32)
         rr = sregs[SREG["rr"]]
         if write_trace:
-            trace = _masked_trace(c.trace, c.k, keep, n_sregs[SREG["rr"]])
+            trace = _masked_trace(c.trace, c.k, upd, rr_cand)
         else:
             trace = c.trace
         live = rr > tol
         if maxiter_vec is not None:
             live = live & (it < maxiter_vec)
+        if detect:
+            live = live & ~(bd_i | bd_n)
+        status = advance_status(c.status, upd=upd, bd_indef=bd_i,
+                                bd_nonf=bd_n, rr_new=rr_cand, tol=tol,
+                                it=it, maxiter_vec=maxiter_vec)
         active = jnp.where(keep, live, c.active)
-        return _SpecCarry(k=c.k + go.astype(jnp.int32), it=it, mem=mem,
-                          queues=queues, sregs=sregs, active=active,
-                          trace=trace)
+        return _SpecCarry(k=c.k + go.astype(jnp.int32), it=it,
+                          status=status, mem=mem, queues=queues,
+                          sregs=sregs, active=active, trace=trace)
 
     return body
 
@@ -457,7 +490,8 @@ def _spec_body(plan: _ProgramPlan, matvec, tol, maxiter_vec=None, *,
 def make_vm_runner(*, backend, scheme, maxiter, with_trace, layout=None,
                    groups=None, block_rows=None, col_tile=None,
                    n_col_tiles=None, steps_per_sync: int = 8,
-                   donate: bool = False, interpret=False,
+                   donate: bool = False, detect: bool = True,
+                   interpret=False,
                    program: Optional[np.ndarray] = None):
     """Build the jitted solve-to-completion VM runner for one bucket.
 
@@ -479,6 +513,9 @@ def make_vm_runner(*, backend, scheme, maxiter, with_trace, layout=None,
     the caller's cache key (:func:`repro.core.compile.executable_key`).
     ``donate=True`` donates the ``b``/``x0`` operands into the warm-up —
     only safe when the caller constructs them fresh per call.
+    ``detect`` arms breakdown detection (static — joins the caller's
+    cache key); leftover ``RUNNING`` statuses finalize to ``MAXITER``
+    before the state is returned.
     """
     scheme = get_scheme(scheme)
     matvec_of = _matvec_factory(
@@ -492,16 +529,17 @@ def make_vm_runner(*, backend, scheme, maxiter, with_trace, layout=None,
         def run(program, mat, diag, b, x0, tol):
             matvec = matvec_of(mat)
             st = vm_init(matvec, diag, b, x0, maxiter=maxiter,
-                         with_trace=with_trace, tol=tol)
+                         with_trace=with_trace, tol=tol, detect=detect)
             tick = _vm_body(program, matvec, tol, bound=maxiter,
-                            write_trace=not hoist_trace)
+                            write_trace=not hoist_trace, detect=detect)
 
             def cond(s):
                 return (s.k < maxiter) & jnp.any(s.active)
 
-            return _run_chunked(cond, tick, st, steps=steps_per_sync,
-                                with_trace=with_trace, maxiter=maxiter,
-                                rr_of=rr_of)
+            out = _run_chunked(cond, tick, st, steps=steps_per_sync,
+                               with_trace=with_trace, maxiter=maxiter,
+                               rr_of=rr_of)
+            return out._replace(status=finalize_status(out.status))
 
         return jax.jit(run, donate_argnums=(3, 4) if donate else ())
 
@@ -510,9 +548,9 @@ def make_vm_runner(*, backend, scheme, maxiter, with_trace, layout=None,
     def run_spec(mat, diag, b, x0, tol):
         matvec = matvec_of(mat)
         st0 = vm_init(matvec, diag, b, x0, maxiter=maxiter,
-                      with_trace=with_trace, tol=tol)
+                      with_trace=with_trace, tol=tol, detect=detect)
         tick = _spec_body(plan, matvec, tol, bound=maxiter,
-                          write_trace=not hoist_trace)
+                          write_trace=not hoist_trace, detect=detect)
 
         def cond(c):
             return (c.k < maxiter) & jnp.any(c.active)
@@ -520,7 +558,8 @@ def make_vm_runner(*, backend, scheme, maxiter, with_trace, layout=None,
         c = _run_chunked(cond, tick, _spec_carry_of(st0, plan),
                          steps=steps_per_sync, with_trace=with_trace,
                          maxiter=maxiter, rr_of=rr_of)
-        return _state_of_spec_carry(c, st0, plan)
+        out = _state_of_spec_carry(c, st0, plan)
+        return out._replace(status=finalize_status(out.status))
 
     return jax.jit(run_spec, donate_argnums=(2, 3) if donate else ())
 
@@ -529,7 +568,7 @@ def make_vm_stepper(*, backend, scheme, bucket, chunk, layout=None,
                     groups=None, index_bytes=None, block_rows=None,
                     col_tile=None, n_col_tiles=None,
                     steps_per_sync: int = 8, donate: bool = False,
-                    interpret=False,
+                    detect: bool = True, interpret=False,
                     program: Optional[np.ndarray] = None):
     """Jitted bounded VM stepper for incremental serving (SolverEngine).
 
@@ -561,7 +600,7 @@ def make_vm_stepper(*, backend, scheme, bucket, chunk, layout=None,
     inner = max(1, min(int(steps_per_sync), int(chunk)))
     key_kw = dict(backend=backend, scheme=scheme.name, bucket=bucket,
                   layout=layout, index_bytes=index_bytes, chunk=chunk,
-                  steps_per_sync=inner, donate=donate,
+                  steps_per_sync=inner, donate=donate, detect=detect,
                   interpret=interpret)
 
     def chunked(cond, tick, st):
@@ -586,7 +625,7 @@ def make_vm_stepper(*, backend, scheme, bucket, chunk, layout=None,
                 matvec = matvec_of(mat)
                 start = state.k
                 tick = _vm_body(program, matvec, tol, maxiter_vec,
-                                bound=start + chunk)
+                                bound=start + chunk, detect=detect)
 
                 def cond(s):
                     return (s.k - start < chunk) & jnp.any(s.active)
@@ -611,7 +650,7 @@ def make_vm_stepper(*, backend, scheme, bucket, chunk, layout=None,
             matvec = matvec_of(mat)
             start = state.k
             tick = _spec_body(plan, matvec, tol, maxiter_vec,
-                              bound=start + chunk)
+                              bound=start + chunk, detect=detect)
 
             def cond(c):
                 return (c.k - start < chunk) & jnp.any(c.active)

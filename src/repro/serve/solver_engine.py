@@ -82,11 +82,15 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.batch import (_as_csr, batched_matvec_rowell,
-                              batched_matvec_sell, batched_matvec_ellpack)
+from repro.core.batch import (_as_csr, batch_cache_info,
+                              batched_matvec_rowell, batched_matvec_sell,
+                              batched_matvec_ellpack)
 from repro.core.cg import CGResult
 from repro.core.compile import canonical_program
 from repro.core.isa import BUF, SREG
+from repro.core.metrics import (Metrics, initial_status, is_breakdown,
+                                is_breakdown_codes, status_name,
+                                STATUS_MAXITER, STATUS_RUNNING)
 from repro.core.precision import get_scheme
 from repro.core.vm import BatchedVMState, make_vm_stepper
 from repro.sparse.csr import CSRMatrix
@@ -118,6 +122,9 @@ class SolverEngineConfig:
     steps_per_sync: int = 8           # VM ticks per termination sync
     donate: bool = True               # donate state into each step
     compact_fraction: float = 0.5     # repack lanes when live/lanes < this
+    detect: bool = True               # in-loop breakdown detection
+    escalate_fp64: bool = False       # retry a breakdown once at fp64
+    escalate_scheme: str = "fp64"     # where escalation re-routes to
 
 
 @partial(jax.jit, static_argnames=("scheme",))
@@ -158,11 +165,12 @@ class _Pool:
     """Slots + VM state for one (scheme, policy) request class."""
 
     def __init__(self, cfg: SolverEngineConfig, scheme, policy: str,
-                 interpret: bool):
+                 interpret: bool, metrics: Optional[Metrics] = None):
         self.cfg = cfg
         self.scheme = scheme
         self.policy = policy
         self.interpret = interpret
+        self.metrics = metrics if metrics is not None else Metrics()
         self.program_np = np.asarray(canonical_program(policy), np.int32)
         self.program = jnp.asarray(self.program_np)
         self.slots = cfg.batch_slots             # current lane capacity
@@ -249,6 +257,7 @@ class _Pool:
         mem = mem.at[BUF["M"]].set(1.0)          # unit diag on empty rows
         state = BatchedVMState(
             k=jnp.zeros((), jnp.int32), it=jnp.zeros(S, jnp.int32),
+            status=jnp.zeros(S, jnp.int32),
             mem=mem, queues=jnp.zeros((8, S, n_pad), vd),
             sregs=jnp.zeros((6, S), vd), active=jnp.zeros(S, bool),
             trace=jnp.zeros((S, 0), vd))
@@ -283,9 +292,11 @@ class _Pool:
             state = state._replace(
                 k=old_state.k, it=grow(state.it, old_state.it), mem=mem,
                 queues=queues, sregs=grow(state.sregs, old_state.sregs),
-                active=grow(state.active, old_state.active))
+                active=grow(state.active, old_state.active),
+                status=grow(state.status, old_state.status))
             tol = tol.at[:S_old].set(self.tol)
             maxiter_vec = maxiter_vec.at[:S_old].set(self.maxiter_vec)
+            self.metrics.bump("growths")
         self.bucket = dims
         self.mat = mat
         self.state = state
@@ -414,12 +425,29 @@ class _Pool:
         self.state = st._replace(
             it=st.it.at[s].set(0), mem=st.mem.at[:, s].set(lane_mem),
             queues=st.queues.at[:, s].set(0.0), sregs=sregs,
-            active=st.active.at[s].set(rr > req_tol))
+            active=st.active.at[s].set(rr > req_tol),
+            status=st.status.at[s].set(
+                initial_status(rr, req_tol, detect=cfg.detect)))
         self.tol = self.tol.at[s].set(req_tol)
         self.maxiter_vec = self.maxiter_vec.at[s].set(
             cfg.maxiter if maxiter is None else maxiter)
         self.n_of_slot[s] = n
+        self.metrics.bump("admits")
+        self.metrics.bump("spmv_calls")          # the warm-up r0 = b - A·x0
+        self.metrics.bump("bytes_streamed_est", self._lane_stream_bytes())
         return s
+
+    def _lane_stream_bytes(self) -> int:
+        """At-rest nonzero stream per lane per SpMV: packed values +
+        column indices, padding included — i.e.
+        ``scheme.nonzero_stream_bytes(index_bytes) × padding_ratio × nnz``
+        computed directly from the slot-stacked arrays."""
+        ellpack = self.cfg.backend == "pallas" and self.layout != "sell"
+        if ellpack:
+            nb = self.mat[1].nbytes + self.mat[2].nbytes
+        else:
+            nb = self.mat[0].nbytes + self.mat[1].nbytes
+        return int(nb) // self.slots
 
     # -------------------------------------------------------------- tick
     @property
@@ -437,7 +465,11 @@ class _Pool:
             col_tile=cfg.col_tile,
             n_col_tiles=self.bucket[-1] if ellpack else None,
             steps_per_sync=cfg.steps_per_sync, donate=cfg.donate,
-            interpret=self.interpret)
+            detect=cfg.detect, interpret=self.interpret)
+        # Materialize the pre-step counters to host before the call —
+        # with cfg.donate the state operand is consumed by the stepper.
+        it0 = np.asarray(self.state.it)
+        st0 = np.asarray(self.state.status)
         if cfg.specialize:
             stepper = make_vm_stepper(program=self.program_np, **stepper_kw)
             self.state = stepper(self.mat, self.state, self.tol,
@@ -446,6 +478,20 @@ class _Pool:
             stepper = make_vm_stepper(**stepper_kw)
             self.state = stepper(self.program, self.mat, self.state,
                                  self.tol, self.maxiter_vec)
+        # Accounting: committed iterations plus one discarded program
+        # execution per lane that broke down during this step (its tick
+        # ran the SpMV before the writes were thrown away).  Frozen
+        # lanes' SIMD dead compute is deliberately NOT counted — it
+        # streams nothing on the modeled architecture.
+        it_delta = int((np.asarray(self.state.it) - it0).sum())
+        broke = int((is_breakdown_codes(np.asarray(self.state.status))
+                     & ~is_breakdown_codes(st0)).sum())
+        m = self.metrics
+        m.bump("chunks")
+        m.bump("iterations", it_delta)
+        m.bump("spmv_calls", it_delta + broke)
+        m.bump("bytes_streamed_est",
+               (it_delta + broke) * self._lane_stream_bytes())
 
     def harvest(self) -> Dict[int, CGResult]:
         if self.state is None:
@@ -453,6 +499,7 @@ class _Pool:
         done: Dict[int, CGResult] = {}
         active = np.asarray(self.state.active)
         its = np.asarray(self.state.it)
+        statuses = np.asarray(self.state.status)
         rrs = np.asarray(self.state.sregs[SREG["rr"]])
         tols = np.asarray(self.tol)
         for s, rid in enumerate(self.req_of_slot):
@@ -463,15 +510,23 @@ class _Pool:
             # is consumed by the next step(), which would invalidate any
             # device view we handed out here.
             x = np.asarray(self.state.mem[BUF["x"], s, :n])
+            # An inactive lane still RUNNING is the detection-off
+            # non-finite-at-admit corner (it deactivated without ever
+            # ticking); it wears the budget-exhausted face.
+            code = int(statuses[s])
+            if code == STATUS_RUNNING:
+                code = STATUS_MAXITER
             done[rid] = CGResult(
                 x=x, iterations=int(its[s]),
                 rr=float(rrs[s]), converged=bool(rrs[s] <= tols[s]),
                 residual_trace=None, scheme=self.scheme.name,
-                method=f"vm_engine[{self.policy}]")
+                method=f"vm_engine[{self.policy}]",
+                status=status_name(code))
             self.req_of_slot[s] = None
             # release the CSR: a departed lane must not keep inflating
             # future sell width merges (widths stay monotone regardless)
             self.csr_of_slot[s] = None
+            self.metrics.bump("harvests")
         return done
 
     # --------------------------------------------------------- compaction
@@ -501,7 +556,7 @@ class _Pool:
         self.mat = tuple(arr[sel_j] for arr in self.mat)
         st = self.state
         self.state = st._replace(
-            it=st.it[sel_j], mem=st.mem[:, sel_j],
+            it=st.it[sel_j], status=st.status[sel_j], mem=st.mem[:, sel_j],
             queues=st.queues[:, sel_j], sregs=st.sregs[:, sel_j],
             active=st.active[sel_j], trace=st.trace[sel_j])
         self.tol = self.tol[sel_j]
@@ -510,6 +565,7 @@ class _Pool:
         self.csr_of_slot = [self.csr_of_slot[s] for s in sel]
         self.n_of_slot = self.n_of_slot[sel]
         self.slots = target
+        self.metrics.bump("compactions")
         return True
 
 
@@ -526,6 +582,12 @@ class SolverEngine:
         self._pools: Dict[Tuple[str, str], _Pool] = {}
         self._next_id = 0
         self.results: Dict[int, CGResult] = {}
+        self._metrics = Metrics()
+        # Request meta for the escalation policy: rid -> (a, b, x0, tol,
+        # maxiter, policy).  Only populated when cfg.escalate_fp64 is on
+        # (retaining every operand would defeat slot recycling otherwise).
+        self._meta: Dict[int, tuple] = {}
+        self._retried: set = set()
 
     def _pool(self, scheme: Optional[str], policy: Optional[str]) -> _Pool:
         scheme = get_scheme(self.cfg.scheme if scheme is None else scheme)
@@ -533,8 +595,32 @@ class SolverEngine:
         key = (scheme.name, policy)
         if key not in self._pools:
             self._pools[key] = _Pool(self.cfg, scheme, policy,
-                                     self.interpret)
+                                     self.interpret, self._metrics)
         return self._pools[key]
+
+    def metrics(self) -> dict:
+        """Engine observability snapshot — a plain dict (json-safe).
+
+        Counters: ``admits`` / ``harvests`` / ``escalations`` (request
+        lifecycle), ``chunks`` / ``iterations`` / ``spmv_calls`` /
+        ``bytes_streamed_est`` (work executed; bytes = SpMV events × the
+        per-lane at-rest nonzero stream, padding included), ``growths`` /
+        ``compactions`` (pool geometry events); ``exit_status`` is the
+        histogram of *recorded* request exits (escalated-and-retried
+        requests count once, at their final exit); ``pools`` reports
+        per-(scheme, policy) slot occupancy; ``executable_cache`` is
+        :func:`repro.core.batch.batch_cache_info`.
+        """
+        pools = {
+            f"{sch}/{pol}": {
+                "slots": p.slots,
+                "occupied": sum(r is not None for r in p.req_of_slot),
+                "active": (int(p.state.active.sum())
+                           if p.state is not None else 0),
+            }
+            for (sch, pol), p in self._pools.items()}
+        return self._metrics.snapshot(extra={
+            "pools": pools, "executable_cache": batch_cache_info()})
 
     # ------------------------------------------------------------ public
     def free_slots(self, pool: Optional[Tuple[Optional[str],
@@ -587,6 +673,11 @@ class SolverEngine:
         ``policy``/``scheme`` override the engine defaults per request and
         route the system to the matching (scheme, policy) pool — see the
         module docstring for what each override costs in executables.
+
+        With ``cfg.escalate_fp64`` the request's operands are retained so
+        a breakdown exit can be retried once in the
+        ``cfg.escalate_scheme`` pool (the result then carries
+        ``retried=True``).
         """
         self._harvest()        # a lane done since the last tick frees its slot
         pool = self._pool(scheme, policy)
@@ -594,6 +685,9 @@ class SolverEngine:
         rid = self._next_id
         self._next_id += 1
         pool.req_of_slot[s] = rid
+        if self.cfg.escalate_fp64:
+            self._meta[rid] = (a, b, x0, tol, maxiter,
+                               self.cfg.policy if policy is None else policy)
         return rid
 
     def step(self) -> Dict[int, CGResult]:
@@ -609,11 +703,43 @@ class SolverEngine:
         return done
 
     def _harvest(self) -> Dict[int, CGResult]:
-        done: Dict[int, CGResult] = {}
+        raw: Dict[int, CGResult] = {}
         for pool in self._pools.values():
-            done.update(pool.harvest())
+            raw.update(pool.harvest())
+        done: Dict[int, CGResult] = {}
+        for rid, res in raw.items():
+            if self._should_escalate(rid, res):
+                # One retry at the escalation scheme: re-admit the
+                # retained operands into the target pool under the SAME
+                # request id — the caller sees one request, one (final)
+                # result, with retried=True.
+                a, b, x0, tol, maxiter, policy = self._meta[rid]
+                pool = self._pool(self.cfg.escalate_scheme, policy)
+                s = pool.admit(a, b, x0, tol, maxiter)
+                pool.req_of_slot[s] = rid
+                self._retried.add(rid)
+                self._metrics.bump("escalations")
+                continue
+            res.retried = rid in self._retried
+            self._metrics.record_exit(res.status)
+            self._meta.pop(rid, None)
+            self._retried.discard(rid)
+            done[rid] = res
         self.results.update(done)
         return done
+
+    def _should_escalate(self, rid: int, res: CGResult) -> bool:
+        if not (self.cfg.escalate_fp64 and is_breakdown(res.status)):
+            return False
+        if rid in self._retried or rid not in self._meta:
+            return False
+        target = get_scheme(self.cfg.escalate_scheme)
+        if res.scheme == target.name:
+            return False       # already ran at the escalation scheme
+        if (target.vector_dtype == jnp.float64
+                and not jax.config.read("jax_enable_x64")):
+            return False       # fp64 retry impossible without x64
+        return True
 
     def run_to_completion(self, max_ticks: int = 10_000) -> Dict[int, CGResult]:
         """Tick until every admitted system finished; returns all results

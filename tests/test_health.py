@@ -1,0 +1,331 @@
+"""Breakdown detection, lane lifecycle, and engine observability (ISSUE 9).
+
+The property net that locks the health layer down:
+
+* **poisoned bags** — random SPD bags with injected indefinite /
+  singular / NaN lanes, across the faithful schemes × {xla, pallas} ×
+  {row-major, sell} layouts and both engines: every poisoned lane reports the
+  right structured exit, and the *healthy* lanes are bit-identical to a
+  detection-off run and to the phases oracle (detection must be free);
+* **request lifecycle** — the engine's opt-in fp64 escalation turns a
+  mixed-precision breakdown into a converged fp64 result carrying
+  ``retried=True``; donation + mid-run compaction preserve statuses;
+* **observability** — the exit-status histogram sums to the number of
+  submitted requests; the solve runners feed the module-global
+  :func:`repro.core.metrics.solver_metrics` with exact SpMV/iteration
+  accounting.
+
+Poison constructions (chosen so the breakdown is *exact* in every
+precision scheme — no rounding luck):
+
+* ``J_n`` (all-ones, rank 1) with a sum-zero rhs: the first search
+  direction lies in the nullspace, ``pAp = 0`` on tick 1 (the ±1
+  entries cancel exactly in any float width);
+* ``[[1, 2], [2, 1]]`` (eigenvalues 3, −1) embedded in an identity
+  block, rhs hitting the indefinite block: ``pAp`` goes negative on the
+  *second* tick — detection mid-run, not just at warm-up;
+* a NaN-seeded rhs: non-finite at admission.
+"""
+import numpy as np
+import pytest
+from _hyp import given, settings, strategies as st
+
+from repro.core.batch import jpcg_solve_batched
+from repro.core.metrics import (reset_solver_metrics, solver_metrics,
+                                tick_health)
+from repro.serve.solver_engine import SolverEngine, SolverEngineConfig
+from repro.sparse import csr_from_coo, random_spd, tridiagonal_spd
+
+pytestmark = pytest.mark.health
+
+BK = dict(block_rows=8, col_tile=128)
+SCHEMES = ["fp64", "mixed_v1", "mixed_v2", "mixed_v3"]
+BACKENDS = [("xla", "rowell"), ("xla", "sell"),
+            ("pallas", "ellpack"), ("pallas", "sell")]
+MAXITER = 200
+
+
+def _singular_J(n):
+    """All-ones matrix (rank 1) + sum-zero rhs -> pAp = 0 on tick 1."""
+    i = np.repeat(np.arange(n), n)
+    j = np.tile(np.arange(n), n)
+    a = csr_from_coo(i, j, np.ones(n * n), (n, n))
+    b = np.zeros(n)
+    b[0], b[1] = 1.0, -1.0
+    return a, b
+
+
+def _indefinite_block(n):
+    """Identity with its last 2×2 replaced by [[1,2],[2,1]] (eig 3, −1),
+    rhs = e_{n-2}: the solve stays confined to the indefinite block and
+    ``pAp`` turns negative on the second tick."""
+    i = np.concatenate([np.arange(n - 2), [n - 2, n - 2, n - 1, n - 1]])
+    j = np.concatenate([np.arange(n - 2), [n - 2, n - 1, n - 2, n - 1]])
+    v = np.concatenate([np.ones(n - 2), [1.0, 2.0, 2.0, 1.0]])
+    a = csr_from_coo(i, j, v, (n, n))
+    b = np.zeros(n)
+    b[n - 2] = 1.0
+    return a, b
+
+
+def _nan_rhs(n):
+    a = tridiagonal_spd(n)
+    b = np.ones(n)
+    b[0] = np.nan
+    return a, b
+
+
+#: lane index -> expected terminal status for :func:`_poison_bag`.
+EXPECTED = {2: "BREAKDOWN_INDEFINITE", 3: "BREAKDOWN_INDEFINITE",
+            4: "BREAKDOWN_NONFINITE"}
+
+
+def _poison_bag(n, seed):
+    """2 healthy lanes + singular + mid-run indefinite + NaN rhs."""
+    probs = [random_spd(n, cond=50.0, seed=seed), tridiagonal_spd(n)]
+    bs = [np.ones(n), np.ones(n)]
+    for a, b in (_singular_J(n), _indefinite_block(n), _nan_rhs(n)):
+        probs.append(a)
+        bs.append(b)
+    return probs, bs
+
+
+def _check_poisoned(results):
+    for g, want in EXPECTED.items():
+        r = results[g]
+        assert r.status == want, f"lane {g}: {r.status} != {want}"
+        assert not r.converged
+        assert r.iterations < MAXITER     # froze early, didn't spin
+    for g in (0, 1):
+        assert results[g].status == "CONVERGED" and results[g].converged
+
+
+def _assert_lane_equal(r1, r2, g):
+    assert r1.iterations == r2.iterations, f"lane {g} iterations differ"
+    assert np.array_equal(np.asarray(r1.x), np.asarray(r2.x),
+                          equal_nan=True), f"lane {g} x differs"
+
+
+class TestPoisonedBag:
+    """Detection fires with the right diagnosis and costs healthy lanes
+    nothing — on every scheme, backend, layout, and engine."""
+
+    @pytest.mark.parametrize("backend,layout", BACKENDS)
+    @pytest.mark.parametrize("scheme", SCHEMES)
+    def test_sweep_statuses_and_bit_identity(self, scheme, backend, layout):
+        probs, bs = _poison_bag(24, seed=7)
+        kw = dict(tol=1e-10, maxiter=MAXITER, scheme=scheme,
+                  backend=backend, layout=layout, **BK)
+        if backend == "pallas":
+            kw["interpret"] = True
+        vm = jpcg_solve_batched(probs, bs, engine="vm", **kw)
+        _check_poisoned(vm)
+        # Healthy lanes bit-identical to the detection-off run: with
+        # detect=False tick_health returns the keep mask itself, so the
+        # compiled dataflow is unchanged by construction — this asserts
+        # the construction survived both engines' plumbing.
+        off = jpcg_solve_batched(probs, bs, engine="vm", detect=False, **kw)
+        for g in (0, 1):
+            assert off[g].status == "CONVERGED"
+            _assert_lane_equal(vm[g], off[g], g)
+        # Phases oracle: same statuses everywhere, bit-identical lanes
+        # (poisoned lanes freeze at the same pre-tick state too).
+        ph = jpcg_solve_batched(probs, bs, engine="phases", **kw)
+        for g, (v, p) in enumerate(zip(vm, ph)):
+            assert v.status == p.status, f"lane {g}"
+            _assert_lane_equal(v, p, g)
+
+    @given(n=st.sampled_from([16, 24, 40]), seed=st.integers(0, 2**16))
+    @settings(deadline=None, max_examples=6)
+    def test_random_bags_property(self, n, seed):
+        """∀ bag: poisoned lanes -> right status, healthy lanes ->
+        CONVERGED + bit-identical to detection-off (xla/rowell, both
+        engines; the parametrized sweep covers the backend × layout
+        grid at a fixed draw)."""
+        probs, bs = _poison_bag(n, seed)
+        kw = dict(tol=1e-10, maxiter=MAXITER, layout="rowell", **BK)
+        for engine in ("vm", "phases"):
+            on = jpcg_solve_batched(probs, bs, engine=engine, **kw)
+            _check_poisoned(on)
+            off = jpcg_solve_batched(probs, bs, engine=engine,
+                                     detect=False, **kw)
+            for g in (0, 1):
+                _assert_lane_equal(on[g], off[g], g)
+
+    def test_generic_vm_path_detects(self):
+        """The traced-program (specialize=False) VM path carries the
+        same status semantics as the unrolled path."""
+        probs, bs = _poison_bag(16, seed=3)
+        kw = dict(tol=1e-10, maxiter=MAXITER, layout="rowell", **BK)
+        gen = jpcg_solve_batched(probs, bs, engine="vm",
+                                 specialize=False, **kw)
+        _check_poisoned(gen)
+        spec = jpcg_solve_batched(probs, bs, engine="vm", **kw)
+        for g, (a_, b_) in enumerate(zip(spec, gen)):
+            assert a_.status == b_.status
+            _assert_lane_equal(a_, b_, g)
+
+    def test_with_status_false_is_legacy(self):
+        """Satellite c: ``with_status=False`` restores the pre-ISSUE-9
+        result surface (status None, repr unchanged) without changing
+        the numbers."""
+        probs, bs = _poison_bag(16, seed=1)
+        kw = dict(tol=1e-10, maxiter=MAXITER, layout="rowell", **BK)
+        on = jpcg_solve_batched(probs, bs, **kw)
+        off = jpcg_solve_batched(probs, bs, with_status=False, **kw)
+        for g, (r1, r0) in enumerate(zip(on, off)):
+            assert r1.status is not None
+            assert r0.status is None
+            assert "status" not in repr(r0)
+            _assert_lane_equal(r1, r0, g)
+
+    def test_maxiter_vs_breakdown_distinguished(self):
+        """A slow-but-healthy lane exhausting its budget is MAXITER,
+        not a breakdown — the two failure faces stay separate."""
+        a = random_spd(48, cond=1e6, seed=0)
+        res = jpcg_solve_batched([a], tol=1e-14, maxiter=3, **BK)
+        assert res[0].status == "MAXITER"
+        assert not res[0].converged and not res[0].retried
+
+
+class TestTickHealthAlgebra:
+    """Unit semantics of the shared per-tick classifier."""
+
+    def test_detect_off_is_identity(self):
+        import jax.numpy as jnp
+        keep = jnp.array([True, False, True])
+        upd, bi, bn = tick_health(keep, jnp.zeros(3), jnp.zeros(3),
+                                  jnp.zeros(3), jnp.zeros(3), detect=False)
+        assert upd is keep and bi is None and bn is None
+
+    def test_indefinite_wins_over_nonfinite(self):
+        import jax.numpy as jnp
+        keep = jnp.array([True, True, True, False])
+        pap = jnp.array([0.0, jnp.nan, 1.0, -1.0])
+        inf = jnp.array([jnp.inf, jnp.nan, jnp.inf, 1.0])
+        upd, bi, bn = tick_health(keep, pap, inf, inf, inf, detect=True)
+        # lane 0: pAp = 0 with Inf alpha -> the indefiniteness is the
+        # diagnosis; lane 1: NaN pAp fails the <=0 compare -> nonfinite;
+        # lane 2: healthy-but-nonfinite scalars -> nonfinite; lane 3:
+        # already frozen, untouched.
+        assert bi.tolist() == [True, False, False, False]
+        assert bn.tolist() == [False, True, True, False]
+        assert upd.tolist() == [False, False, False, False]
+
+
+class TestEngineLifecycle:
+    def test_escalation_retries_breakdown_at_fp64(self):
+        """A matrix whose fp32 packing rounds singular breaks down in
+        the mixed pool; with ``escalate_fp64`` the engine resubmits it
+        once at fp64 under the same request id and returns a converged
+        result with ``retried=True``."""
+        eps = 1e-9           # 1 - eps rounds to 1.0 in float32
+        a = np.array([[1.0, 1.0 - eps], [1.0 - eps, 1.0]])
+        eng = SolverEngine(SolverEngineConfig(
+            scheme="mixed_v3", batch_slots=4, chunk_iters=8,
+            escalate_fp64=True))
+        rid = eng.submit(a, np.array([1.0, 0.0]), tol=1e-8, maxiter=50)
+        res = eng.run_to_completion()[rid]
+        assert res.retried and res.converged
+        assert res.scheme == "fp64" and res.status == "CONVERGED"
+        m = eng.metrics()
+        assert m["escalations"] == 1
+        # the escalated first attempt is not a recorded exit — one
+        # request, one histogram entry
+        assert m["exit_status"] == {"CONVERGED": 1}
+
+    def test_escalation_is_single_shot(self):
+        """A genuinely singular operand breaks down at fp64 too: the
+        final result is the fp64 breakdown, retried, not a loop."""
+        a, b = _singular_J(8)
+        eng = SolverEngine(SolverEngineConfig(
+            scheme="mixed_v3", batch_slots=4, chunk_iters=8,
+            escalate_fp64=True))
+        rid = eng.submit(a, b, tol=1e-10, maxiter=50)
+        res = eng.run_to_completion()[rid]
+        assert res.retried and not res.converged
+        assert res.scheme == "fp64"
+        assert res.status == "BREAKDOWN_INDEFINITE"
+        assert eng.metrics()["escalations"] == 1
+
+    def test_breakdown_status_without_escalation(self):
+        a, b = _singular_J(16)
+        eng = SolverEngine(SolverEngineConfig(batch_slots=4,
+                                              chunk_iters=8))
+        rid = eng.submit(a, b, tol=1e-10, maxiter=100)
+        res = eng.run_to_completion()[rid]
+        assert res.status == "BREAKDOWN_INDEFINITE"
+        assert not res.retried and res.iterations < 100
+
+    def test_compaction_preserves_status(self):
+        """Easy lanes harvest first, the pool compacts mid-run, and the
+        survivors (a long-running lane and a frozen breakdown pending
+        harvest) keep their statuses through the shuffle."""
+        eng = SolverEngine(SolverEngineConfig(
+            batch_slots=8, chunk_iters=4, compact_fraction=0.75))
+        rids = {}
+        hard = random_spd(32, cond=1e5, seed=2)
+        rids[eng.submit(hard, tol=1e-12, maxiter=4000)] = "hard"
+        for i in range(4):
+            rids[eng.submit(tridiagonal_spd(24, diag=2.0 + 0.2 * i),
+                            tol=1e-10, maxiter=500)] = f"easy{i}"
+        a, b = _singular_J(24)
+        rids[eng.submit(a, b, tol=1e-10, maxiter=500)] = "singular"
+        out = eng.run_to_completion()
+        assert eng.metrics()["compactions"] >= 1
+        for rid, tag in rids.items():
+            res = out[rid]
+            if tag == "singular":
+                assert res.status == "BREAKDOWN_INDEFINITE"
+            else:
+                assert res.status == "CONVERGED", (tag, res.status)
+
+    def test_histogram_sums_to_submitted(self):
+        eng = SolverEngine(SolverEngineConfig(batch_slots=8,
+                                              chunk_iters=8))
+        n_req = 6
+        for i in range(n_req):
+            if i == 0:
+                a, b = _singular_J(16)
+                eng.submit(a, b, tol=1e-10, maxiter=100)
+            elif i == 1:
+                a, b = _nan_rhs(16)
+                eng.submit(a, b, tol=1e-10, maxiter=100)
+            else:
+                eng.submit(tridiagonal_spd(16, diag=2.0 + 0.1 * i),
+                           tol=1e-10, maxiter=500)
+        eng.run_to_completion()
+        m = eng.metrics()
+        assert sum(m["exit_status"].values()) == n_req
+        assert m["exit_status"]["BREAKDOWN_INDEFINITE"] == 1
+        assert m["exit_status"]["BREAKDOWN_NONFINITE"] == 1
+        assert m["exit_status"]["CONVERGED"] == n_req - 2
+        assert m["admits"] == n_req and m["harvests"] == n_req
+        assert m["iterations"] > 0 and m["bytes_streamed_est"] > 0
+        # every pool drained
+        for p in m["pools"].values():
+            assert p["occupied"] == 0 and p["active"] == 0
+
+
+class TestSolverMetricsGlobal:
+    def test_batched_solve_accounting(self):
+        """jpcg_solve_batched feeds the module-global metrics with exact
+        event counts: one warm-up per lane, one SpMV per committed
+        iteration, one discarded tick per in-loop breakdown."""
+        reset_solver_metrics()
+        try:
+            probs, bs = _poison_bag(16, seed=5)
+            res = jpcg_solve_batched(probs, bs, tol=1e-10,
+                                     maxiter=MAXITER, layout="rowell",
+                                     **BK)
+            m = solver_metrics().snapshot()
+            assert m["solves"] == 1 and m["lanes"] == len(probs)
+            its = sum(r.iterations for r in res)
+            assert m["iterations"] == its
+            # breakdown lanes: singular + indefinite-block tick once and
+            # discard; the NaN-rhs lane is latched at warm-up (no tick)
+            assert m["spmv_calls"] == len(probs) + its + 2
+            assert m["bytes_streamed_est"] > 0
+            assert sum(m["exit_status"].values()) == len(probs)
+        finally:
+            reset_solver_metrics()
