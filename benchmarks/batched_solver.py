@@ -48,12 +48,27 @@ claim: mixed-V3 sliced-ELL streams ≥ :data:`SELL_BYTES_REDUCTION_MIN`
 fewer bytes/nnz than FP64-at-rest row-ELL, measured from the packed
 arrays.  Both layouts are bit-identical (asserted below).
 
+The ``sharded_vm_d1`` / ``sharded_vm_d8`` rows (ISSUE 10) time the
+default bag through the specialized VM with the lane axis placed on a
+``lane_mesh()`` — each in a child interpreter that forces the host
+device count (1 vs 8 CPU devices via ``XLA_FLAGS``), because the
+parent session must keep a single device.  Lane sharding is
+bit-identical by contract (asserted in-process below and property-
+tested in tests/test_shard.py), so the row pair is pure throughput:
+on a serial CPU host the 8-way split is bookkeeping overhead; the
+ratio is the number to watch on hardware with real parallel devices.
+
 ``python -m benchmarks.batched_solver [--repeat-suite N] [--smoke]
 [--overhead-threshold X] [--speedup-floor X] [--sell-floor X]``
 """
 from __future__ import annotations
 
+import json
+import os
 import statistics
+import subprocess
+import sys
+import textwrap
 import time
 
 import jax
@@ -63,6 +78,7 @@ from benchmarks.common import emit
 from repro.core.batch import batch_cache_info, jpcg_solve_batched
 from repro.core.cg import jpcg_solve
 from repro.core.precision import get_scheme
+from repro.core.shard import lane_mesh
 from repro.sparse import (diag_dominant_spd, poisson_2d, powerlaw_spd,
                           tridiagonal_spd)
 from repro.sparse.stacking import choose_layout, stack_rowell, stack_sell
@@ -103,6 +119,55 @@ SELL_SPEEDUP_MIN = 0.95
 #: bytes/nnz than FP64-at-rest row-ELL on the skewed bag, measured
 #: from the packed arrays (fp32+int16 at lower padding vs fp64+int16).
 SELL_BYTES_REDUCTION_MIN = 0.40
+
+
+#: Host device counts for the lane-sharded rows; each runs in a child
+#: interpreter with XLA_FLAGS forcing the split (the parent session
+#: stays single-device — same rule as tests/conftest.py).
+SHARD_DEVICES = (1, 8)
+
+
+def _sharded_row_times(devices: int, smoke: bool, steps_per_sync: int,
+                       maxiter: int) -> dict:
+    """Median sharded-solve wall time under N forced host devices,
+    measured inside a child interpreter (timing excludes the child's
+    startup and compile — warm-up happens before the clock starts)."""
+    script = textwrap.dedent(f"""
+        import os
+        os.environ["XLA_FLAGS"] = (
+            "--xla_force_host_platform_device_count={devices}")
+        import json
+        import statistics
+        import time
+        import jax
+        jax.config.update("jax_enable_x64", True)
+        from benchmarks.batched_solver import BK, _bag
+        from repro.core.batch import jpcg_solve_batched
+        from repro.core.shard import lane_mesh
+        probs = _bag(1, smoke={smoke})
+        kw = dict(tol=1e-12, maxiter={maxiter},
+                  steps_per_sync={steps_per_sync}, mesh=lane_mesh(),
+                  engine="vm", **BK)
+        res = jpcg_solve_batched(probs, **kw)          # compile
+        times = []
+        for _ in range(5):
+            t0 = time.perf_counter()
+            res = jpcg_solve_batched(probs, **kw)
+            jax.block_until_ready(res[-1].x)
+            times.append(time.perf_counter() - t0)
+        print(json.dumps({{
+            "devices": jax.device_count(),
+            "time_s": statistics.median(times),
+            "iters": int(sum(r.iterations for r in res)),
+            "systems": len(probs)}}))
+        """)
+    r = subprocess.run([sys.executable, "-c", script],
+                       env=os.environ.copy(), capture_output=True,
+                       text=True, timeout=1800)
+    if r.returncode != 0:
+        raise RuntimeError("sharded bench subprocess (devices="
+                           f"{devices}) failed:\n{r.stderr[-2000:]}")
+    return json.loads(r.stdout.strip().splitlines()[-1])
 
 
 def _bag(copies: int = 1, smoke: bool = False):
@@ -298,6 +363,28 @@ def run(repeat_suite: int = 1, smoke: bool = False,
     assert reduction >= SELL_BYTES_REDUCTION_MIN, (
         f"mixed_v3 sliced-ELL byte reduction {reduction:.0%} below the "
         f"{SELL_BYTES_REDUCTION_MIN:.0%} floor")
+
+    # --- ISSUE 10: lane-sharded rows (forced host device counts) -----
+    # contract check first: on this session's single device, placing the
+    # lane axis on a mesh must be bitwise invisible vs the spec run
+    shard = jpcg_solve_batched(probs, engine="vm", mesh=lane_mesh(), **bkw)
+    for r, p in zip(shard, spec):
+        assert r.iterations == p.iterations, "sharded/spec parity"
+        assert np.array_equal(np.asarray(r.x), np.asarray(p.x)), \
+            "lane-sharded run not bit-identical to unsharded VM"
+    for d in SHARD_DEVICES:
+        info = _sharded_row_times(d, smoke, steps_per_sync, kw["maxiter"])
+        t = info["time_s"]
+        rows.append({"mode": f"sharded_vm_d{info['devices']}",
+                     "systems": info["systems"],
+                     "total_iters": info["iters"],
+                     "time_s": round(t, 4),
+                     "systems_per_s": round(info["systems"] / t, 2),
+                     "iters_per_s": round(info["iters"] / t, 1),
+                     "chunk": k, "layout": chosen,
+                     "padding_ratio": "", "stream_bytes_per_nnz": "",
+                     "speedup": "", "vm_overhead": "",
+                     "spec_speedup": ""})
 
     emit(rows, HEADER)
     print(f"# batch compile cache: {batch_cache_info()}")

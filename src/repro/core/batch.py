@@ -502,7 +502,7 @@ def _matvec_factory(*, backend, scheme, layout=None, groups=None,
 def _make_runner(*, backend, scheme, maxiter, with_trace, layout=None,
                  groups=None, block_rows=None, col_tile=None,
                  n_col_tiles=None, steps_per_sync=8, donate=False,
-                 detect=True, interpret=False):
+                 detect=True, interpret=False, mesh=None):
     """Build the jitted solve-to-completion runner for one bucket shape.
 
     ``steps_per_sync`` = iterations per termination-predicate sync (the
@@ -512,7 +512,10 @@ def _make_runner(*, backend, scheme, maxiter, with_trace, layout=None,
     (see :func:`_batched_body`); either way leftover ``RUNNING`` statuses
     are finalized to ``MAXITER`` before the state is returned — a solve
     runner's loop only exits with everything terminal or the budget
-    spent.
+    spent.  ``mesh`` shards the operands' lane axis over a device mesh
+    before the jitted call (:mod:`repro.core.shard`); lanes are
+    independent, so the sharded runner is bit-identical to the
+    single-device one.
     """
     matvec_of = _matvec_factory(
         backend=backend, scheme=scheme, layout=layout, groups=groups,
@@ -536,7 +539,17 @@ def _make_runner(*, backend, scheme, maxiter, with_trace, layout=None,
                            rr_of=lambda s: s.rr)
         return out._replace(status=finalize_status(out.status))
 
-    return jax.jit(run, donate_argnums=(2, 3) if donate else ())
+    fn = jax.jit(run, donate_argnums=(2, 3) if donate else ())
+    if mesh is None:
+        return fn
+    from repro.core.shard import place_lanes
+
+    def run_sharded(mat, diag, b, x0, tol):
+        return fn(place_lanes(mesh, mat), place_lanes(mesh, diag),
+                  place_lanes(mesh, b), place_lanes(mesh, x0),
+                  place_lanes(mesh, tol))
+
+    return run_sharded
 
 
 # ---------------------------------------------------------------- public
@@ -570,7 +583,8 @@ def jpcg_solve_batched(problems: Sequence, bs: Optional[Sequence] = None,
                        with_trace: bool = False,
                        steps_per_sync: int = 8, donate: bool = False,
                        detect: bool = True, with_status: bool = True,
-                       interpret: Optional[bool] = None) -> List[CGResult]:
+                       interpret: Optional[bool] = None,
+                       mesh=None) -> List[CGResult]:
     """Solve B independent SPD systems in one compiled ``lax.while_loop``.
 
     See the module docstring for the batch API, bucket policy, and the
@@ -621,6 +635,17 @@ def jpcg_solve_batched(problems: Sequence, bs: Optional[Sequence] = None,
     structurally.  Each call also feeds the process-wide
     :func:`repro.core.metrics.solver_metrics` counters (iterations,
     SpMV-call and streamed-byte estimates, exit histogram).
+
+    ``mesh`` (a 1-D :class:`jax.sharding.Mesh`, e.g.
+    :func:`repro.core.shard.lane_mesh`) shards the *lane* axis over D
+    devices: operands are laid out with ``NamedSharding`` over the
+    ``lanes`` axis and the batch is padded up to a multiple of D with
+    inert identity lanes (converged at admission, dropped from the
+    results).  Lanes are independent, so the sharded solve is
+    **bit-identical** to ``mesh=None`` for every scheme × layout ×
+    engine (locked by ``tests/test_shard.py``); the mesh signature
+    joins the executable cache key, so single-device and sharded
+    executables never collide.
     """
     if engine != "vm" and (policy is not None or program is not None):
         raise ValueError(
@@ -649,6 +674,17 @@ def jpcg_solve_batched(problems: Sequence, bs: Optional[Sequence] = None,
     if layout in (None, "auto"):
         layout = choose_layout(
             csrs, default="rowell" if backend == "xla" else "ellpack")
+    # Lane sharding: NamedSharding needs the lane axis divisible by the
+    # shard count, so the bag is padded with inert identity lanes
+    # (b = x0 = 0 -> rr = 0, converged at admission, dropped from the
+    # results).  Padding happens after the layout heuristic so the
+    # choice is driven by the real problems only.
+    G_real = G
+    if mesh is not None:
+        from repro.core.shard import pad_lanes
+        G = pad_lanes(G, mesh)
+        if G != G_real:
+            csrs = csrs + [_as_csr(np.eye(1))] * (G - G_real)
     groups = None
     n_col_tiles = None
     if layout == "sell":
@@ -686,24 +722,33 @@ def jpcg_solve_batched(problems: Sequence, bs: Optional[Sequence] = None,
     # Padded rows get a unit diagonal and zero rhs: their residual is
     # identically zero, so they never influence rr or termination.
     diag = _pad_stack([a.diagonal() for a in csrs], n_pad, 1.0, vd)
-    bs = list(bs) if bs is not None else [np.ones(n) for n in ns]
-    x0s = list(x0s) if x0s is not None else [np.zeros(n) for n in ns]
+    bs = list(bs) if bs is not None else [np.ones(n) for n in ns[:G_real]]
+    x0s = (list(x0s) if x0s is not None
+           else [np.zeros(n) for n in ns[:G_real]])
     for name, seq in (("bs", bs), ("x0s", x0s)):
-        if len(seq) != G:
-            raise ValueError(f"{name} has {len(seq)} entries for {G} problems")
+        if len(seq) != G_real:
+            raise ValueError(
+                f"{name} has {len(seq)} entries for {G_real} problems")
         for g, v in enumerate(seq):
             if np.shape(v) != (ns[g],):
                 raise ValueError(
                     f"{name}[{g}] has shape {np.shape(v)}, expected "
                     f"({ns[g]},) for problem {g}")
+    if G != G_real:
+        # Shard-padding lanes: zero rhs/start on the identity dummy.
+        bs = bs + [np.zeros(1)] * (G - G_real)
+        x0s = x0s + [np.zeros(1)] * (G - G_real)
     b = _pad_stack(bs, n_pad, 0.0, vd)
     x0 = _pad_stack(x0s, n_pad, 0.0, vd)
     if np.ndim(tol) == 0:
         tol_vec = jnp.full(G, float(tol), vd)
     else:
-        if len(tol) != G:
-            raise ValueError(f"tol has {len(tol)} entries for {G} problems")
-        tol_vec = jnp.asarray(np.asarray(tol, np.float64), vd)
+        if len(tol) != G_real:
+            raise ValueError(
+                f"tol has {len(tol)} entries for {G_real} problems")
+        tol_vec = jnp.asarray(
+            np.concatenate([np.asarray(tol, np.float64),
+                            np.ones(G - G_real)]), vd)
 
     if engine == "vm":
         # Specialized (default): the program is unrolled into the
@@ -729,13 +774,13 @@ def jpcg_solve_batched(problems: Sequence, bs: Optional[Sequence] = None,
             with_trace=with_trace, layout=layout, groups=groups,
             block_rows=block_rows, col_tile=col_tile,
             n_col_tiles=n_col_tiles, steps_per_sync=steps_per_sync,
-            donate=donate, detect=detect, interpret=interpret)
+            donate=donate, detect=detect, interpret=interpret, mesh=mesh)
         key_kw = dict(
             backend=backend, scheme=scheme.name, batch=G,
             bucket=bucket_dims, layout=layout, index_bytes=index_bytes,
             maxiter=maxiter, with_trace=with_trace,
             steps_per_sync=steps_per_sync, donate=donate, detect=detect,
-            interpret=interpret)
+            interpret=interpret, mesh=mesh)
         if specialize:
             key = executable_key("vm_solve_spec", program=prog_np,
                                  **key_kw)
@@ -755,13 +800,13 @@ def jpcg_solve_batched(problems: Sequence, bs: Optional[Sequence] = None,
             bucket=bucket_dims, layout=layout, index_bytes=index_bytes,
             maxiter=maxiter, with_trace=with_trace,
             steps_per_sync=steps_per_sync, donate=donate, detect=detect,
-            interpret=interpret)
+            interpret=interpret, mesh=mesh)
         run = _cached(key, lambda: _make_runner(
             backend=backend, scheme=scheme, maxiter=maxiter,
             with_trace=with_trace, layout=layout, groups=groups,
             block_rows=block_rows, col_tile=col_tile,
             n_col_tiles=n_col_tiles, steps_per_sync=steps_per_sync,
-            donate=donate, detect=detect, interpret=interpret))
+            donate=donate, detect=detect, interpret=interpret, mesh=mesh))
         st = run(mat, diag, b, x0, tol_vec)
         xs, rrs_dev, trace_dev = st.x, st.rr, st.trace
         method = "vsr_batched"
@@ -786,19 +831,20 @@ def jpcg_solve_batched(problems: Sequence, bs: Optional[Sequence] = None,
     # A breakdown lane spent one discarded tick iff it actually entered
     # the loop: an in-loop breakdown freezes at its pre-tick rr (always
     # finite), while a lane latched non-finite at admission keeps its
-    # non-finite warm-up rr and never ticked.
+    # non-finite warm-up rr and never ticked.  Shard-padding lanes
+    # (g >= G_real) are inert and invisible to the accounting.
     n_bd = int(sum(is_breakdown(int(c)) and np.isfinite(rrs[g])
-                   for g, c in enumerate(statuses)))
-    spmv_events = G + int(its.sum()) + n_bd
+                   for g, c in enumerate(statuses[:G_real])))
+    spmv_events = G_real + int(its[:G_real].sum()) + n_bd
     m.bump("solves")
-    m.bump("lanes", G)
-    m.bump("iterations", int(its.sum()))
+    m.bump("lanes", G_real)
+    m.bump("iterations", int(its[:G_real].sum()))
     m.bump("spmv_calls", spmv_events)
     m.bump("bytes_streamed_est", spmv_events * int(lane_stream_bytes))
-    m.record_exits(statuses)
+    m.record_exits(statuses[:G_real])
 
     results = []
-    for g in range(G):
+    for g in range(G_real):
         trace = (np.asarray(trace_dev[g])[: its[g]] if with_trace else None)
         results.append(CGResult(
             x=xs[g, : ns[g]], iterations=int(its[g]), rr=float(rrs[g]),

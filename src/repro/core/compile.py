@@ -398,6 +398,7 @@ def executable_key(kind: str, *, backend: str, scheme: str, bucket,
                    chunk: Optional[int] = None,
                    with_trace: Optional[bool] = None,
                    detect: Optional[bool] = None,
+                   mesh=None,
                    program: Optional[np.ndarray] = None) -> tuple:
     """Canonical executable-cache key for VM/phases runners and steppers.
 
@@ -430,16 +431,24 @@ def executable_key(kind: str, *, backend: str, scheme: str, bucket,
                               ``status`` vector itself is key-neutral — both
                               variants carry it
     ``interpret``             Pallas interpreter vs compiled kernel
+    ``mesh``                  lane-sharding signature, folded to
+                              :func:`repro.core.shard.mesh_signature`
+                              (``None`` = unsharded) — a sharded executable
+                              bakes SPMD operand layouts in at trace time, so
+                              single-device and mesh variants (and different
+                              mesh sizes) must never collide (ISSUE 10)
     ``program``               folded to :func:`repro.core.isa.program_token`;
                               only present for *specialized* executables —
                               generic ones deliberately omit it so any program
                               of one padded length reuses one executable
     ========================  ==================================================
     """
+    from repro.core.shard import mesh_signature
     key = (kind, backend, scheme, batch, tuple(np.ravel(bucket).tolist()),
            layout, index_bytes, maxiter, chunk, with_trace,
            int(steps_per_sync), bool(donate),
-           None if detect is None else bool(detect), bool(interpret))
+           None if detect is None else bool(detect), bool(interpret),
+           mesh_signature(mesh))
     if program is not None:
         key += (program_token(np.asarray(program, np.int32)),)
     return key

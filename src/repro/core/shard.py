@@ -1,0 +1,146 @@
+"""Lane-axis sharding — G independent solves data-parallel over a mesh.
+
+The batched solver and the serving engine widen every per-system array
+by a leading (or second) lane axis ``G``.  Lanes are *independent* by
+construction — every VM op is lane-elementwise, the only cross-lane
+value in the whole loop is the ``jnp.any(active)`` termination
+predicate — so the serving-scale layout is the same one a batched
+inference engine uses for its batch axis: shard the lane axis over a
+1-D device mesh with :class:`jax.sharding.NamedSharding` and let SPMD
+partitioning run ``G/D`` lanes per device with zero per-iteration
+collectives (the ``any`` reduce happens once per sync chunk, and
+admit/harvest cross the host boundary exactly as they do on one
+device).
+
+Because each device's local block is just a smaller lane bucket — and
+lane-count invariance is already a locked invariant of the solver
+(pool compaction repacks lanes bitwise-neutrally) — a sharded solve is
+**bit-identical** to the single-device one, which ``tests/test_shard.py``
+asserts for every scheme × layout × engine.
+
+This module holds the small amount of shared plumbing:
+
+* :func:`lane_mesh` — build the 1-D ``("lanes",)`` mesh;
+* :func:`mesh_shards` / :func:`mesh_signature` — fold a mesh to its
+  shard count / to the hashable token that joins
+  :func:`repro.core.compile.executable_key` (single-device and sharded
+  executables must never collide in the cache);
+* :func:`pad_lanes` — round a lane count up to a shard-divisible size
+  (``NamedSharding`` needs the lane axis evenly divisible);
+* :func:`place_lanes` / :func:`place_replicated` /
+  :func:`place_vm_state` — ``device_put`` operands and VM state with
+  the lane axis sharded and everything else replicated.
+
+On CPU the mesh comes from
+``XLA_FLAGS=--xla_force_host_platform_device_count=N`` (the CI lane
+sets 8); a 1-device mesh is valid everywhere and exercises the same
+code path, which is how the sharding tests stay green on a bare image.
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec
+
+__all__ = ["LANE_AXIS", "lane_mesh", "mesh_shards", "mesh_signature",
+           "pad_lanes", "lane_sharding", "place_lanes",
+           "place_replicated", "place_vm_state"]
+
+#: Canonical mesh axis name for the lane (batch-of-systems) dimension.
+LANE_AXIS = "lanes"
+
+
+def lane_mesh(devices: Optional[Sequence] = None,
+              axis_name: str = LANE_AXIS) -> Mesh:
+    """1-D lane mesh over ``devices`` (default: every visible device)."""
+    devs = list(jax.devices()) if devices is None else list(devices)
+    return Mesh(np.array(devs), (axis_name,))
+
+
+def mesh_shards(mesh: Optional[Mesh]) -> int:
+    """Number of lane shards D (1 for ``mesh=None`` — the unsharded path)."""
+    if mesh is None:
+        return 1
+    return int(np.prod([mesh.shape[a] for a in mesh.axis_names], dtype=np.int64))
+
+
+def mesh_signature(mesh) -> Optional[Tuple[Tuple[str, int], ...]]:
+    """Hashable cache-key token of a mesh: ``((axis, size), ...)``.
+
+    ``None`` stays ``None`` (the unsharded key), so a 1-device mesh is
+    deliberately *distinct* from no mesh at all — the executables differ
+    (sharded operand layouts are baked in at trace time) and must not
+    collide.  Accepts an already-folded signature unchanged, so callers
+    can pass either form down to :func:`repro.core.compile.executable_key`.
+    """
+    if mesh is None:
+        return None
+    if isinstance(mesh, tuple):
+        return mesh
+    return tuple((str(a), int(mesh.shape[a])) for a in mesh.axis_names)
+
+
+def pad_lanes(g: int, mesh: Optional[Mesh]) -> int:
+    """Smallest lane count ≥ ``g`` that the mesh divides evenly.
+
+    ``NamedSharding`` requires the sharded axis to divide by the shard
+    count; the batched front door pads the problem list up to this with
+    inert identity lanes (converged at admission, dropped from results).
+    """
+    d = mesh_shards(mesh)
+    return int(-(-max(int(g), 1) // d) * d)
+
+
+def lane_sharding(mesh: Mesh, ndim: int, lane_axis: int = 0) -> NamedSharding:
+    """NamedSharding partitioning ``lane_axis`` over the mesh, rest
+    replicated."""
+    spec = [None] * ndim
+    spec[lane_axis] = mesh.axis_names if len(mesh.axis_names) > 1 \
+        else mesh.axis_names[0]
+    return NamedSharding(mesh, PartitionSpec(*spec))
+
+
+def place_lanes(mesh: Optional[Mesh], arrays, lane_axis: int = 0):
+    """``device_put`` array(s) with the lane axis sharded over the mesh.
+
+    Accepts one array or a tuple/list of arrays that all carry their
+    lane axis at the same position.  No-op for ``mesh=None``, and cheap
+    when an array already has the target sharding (``device_put``
+    short-circuits).
+    """
+    if mesh is None:
+        return arrays
+    def put(a):
+        return jax.device_put(a, lane_sharding(mesh, np.ndim(a), lane_axis))
+    if isinstance(arrays, (tuple, list)):
+        return type(arrays)(put(a) for a in arrays)
+    return put(arrays)
+
+
+def place_replicated(mesh: Optional[Mesh], x):
+    """``device_put`` a value fully replicated over the mesh."""
+    if mesh is None:
+        return x
+    return jax.device_put(x, NamedSharding(mesh, PartitionSpec()))
+
+
+def place_vm_state(mesh: Optional[Mesh], state):
+    """Lay a :class:`repro.core.vm.BatchedVMState` out over the mesh.
+
+    ``mem``/``queues``/``sregs`` carry the lane axis at position 1
+    (buffer/queue/register id leads), everything else at position 0;
+    the global tick ``k`` is replicated.
+    """
+    if mesh is None:
+        return state
+    return state._replace(
+        k=place_replicated(mesh, state.k),
+        it=place_lanes(mesh, state.it),
+        status=place_lanes(mesh, state.status),
+        mem=place_lanes(mesh, state.mem, lane_axis=1),
+        queues=place_lanes(mesh, state.queues, lane_axis=1),
+        sregs=place_lanes(mesh, state.sregs, lane_axis=1),
+        active=place_lanes(mesh, state.active),
+        trace=place_lanes(mesh, state.trace))

@@ -491,7 +491,7 @@ def make_vm_runner(*, backend, scheme, maxiter, with_trace, layout=None,
                    groups=None, block_rows=None, col_tile=None,
                    n_col_tiles=None, steps_per_sync: int = 8,
                    donate: bool = False, detect: bool = True,
-                   interpret=False,
+                   interpret=False, mesh=None,
                    program: Optional[np.ndarray] = None):
     """Build the jitted solve-to-completion VM runner for one bucket.
 
@@ -515,7 +515,11 @@ def make_vm_runner(*, backend, scheme, maxiter, with_trace, layout=None,
     only safe when the caller constructs them fresh per call.
     ``detect`` arms breakdown detection (static — joins the caller's
     cache key); leftover ``RUNNING`` statuses finalize to ``MAXITER``
-    before the state is returned.
+    before the state is returned.  ``mesh`` shards the operands' lane
+    axis over a device mesh before the jitted call
+    (:mod:`repro.core.shard`; the caller's cache key must include the
+    mesh signature) — lanes are independent, so results stay
+    bit-identical to the single-device path.
     """
     scheme = get_scheme(scheme)
     matvec_of = _matvec_factory(
@@ -541,7 +545,19 @@ def make_vm_runner(*, backend, scheme, maxiter, with_trace, layout=None,
                                rr_of=rr_of)
             return out._replace(status=finalize_status(out.status))
 
-        return jax.jit(run, donate_argnums=(3, 4) if donate else ())
+        fn = jax.jit(run, donate_argnums=(3, 4) if donate else ())
+        if mesh is None:
+            return fn
+        from repro.core.shard import place_lanes, place_replicated
+
+        def run_sharded(program, mat, diag, b, x0, tol):
+            return fn(place_replicated(mesh, program),
+                      place_lanes(mesh, mat), place_lanes(mesh, diag),
+                      place_lanes(mesh, b), place_lanes(mesh, x0),
+                      place_lanes(mesh, tol))
+
+        run_sharded._cache_size = fn._cache_size   # vm_executable_stats
+        return run_sharded
 
     plan = _analyze_program(program)
 
@@ -561,14 +577,25 @@ def make_vm_runner(*, backend, scheme, maxiter, with_trace, layout=None,
         out = _state_of_spec_carry(c, st0, plan)
         return out._replace(status=finalize_status(out.status))
 
-    return jax.jit(run_spec, donate_argnums=(2, 3) if donate else ())
+    fn_spec = jax.jit(run_spec, donate_argnums=(2, 3) if donate else ())
+    if mesh is None:
+        return fn_spec
+    from repro.core.shard import place_lanes
+
+    def run_spec_sharded(mat, diag, b, x0, tol):
+        return fn_spec(place_lanes(mesh, mat), place_lanes(mesh, diag),
+                       place_lanes(mesh, b), place_lanes(mesh, x0),
+                       place_lanes(mesh, tol))
+
+    run_spec_sharded._cache_size = fn_spec._cache_size
+    return run_spec_sharded
 
 
 def make_vm_stepper(*, backend, scheme, bucket, chunk, layout=None,
                     groups=None, index_bytes=None, block_rows=None,
                     col_tile=None, n_col_tiles=None,
                     steps_per_sync: int = 8, donate: bool = False,
-                    detect: bool = True, interpret=False,
+                    detect: bool = True, interpret=False, mesh=None,
                     program: Optional[np.ndarray] = None):
     """Jitted bounded VM stepper for incremental serving (SolverEngine).
 
@@ -595,13 +622,19 @@ def make_vm_stepper(*, backend, scheme, bucket, chunk, layout=None,
     retains across a step — harvested results — must be materialized
     first).  (No separate diag operand on either path — the
     preconditioner lives in ``mem[M]``.)
+
+    ``mesh`` shards the lane axis over a device mesh
+    (:mod:`repro.core.shard`): operands and state are re-placed with
+    ``NamedSharding`` before every step (a no-op once they carry the
+    target layout), and the mesh signature joins the cache key so the
+    sharded stepper never collides with the single-device one.
     """
     scheme = get_scheme(scheme)
     inner = max(1, min(int(steps_per_sync), int(chunk)))
     key_kw = dict(backend=backend, scheme=scheme.name, bucket=bucket,
                   layout=layout, index_bytes=index_bytes, chunk=chunk,
                   steps_per_sync=inner, donate=donate, detect=detect,
-                  interpret=interpret)
+                  interpret=interpret, mesh=mesh)
 
     def chunked(cond, tick, st):
         if inner <= 1:
@@ -632,7 +665,21 @@ def make_vm_stepper(*, backend, scheme, bucket, chunk, layout=None,
 
                 return chunked(cond, tick, state)
 
-            return jax.jit(step, donate_argnums=(2,) if donate else ())
+            fn = jax.jit(step, donate_argnums=(2,) if donate else ())
+            if mesh is None:
+                return fn
+            from repro.core.shard import (place_lanes, place_replicated,
+                                          place_vm_state)
+
+            def step_sharded(program, mat, state, tol, maxiter_vec):
+                return fn(place_replicated(mesh, program),
+                          place_lanes(mesh, mat),
+                          place_vm_state(mesh, state),
+                          place_lanes(mesh, tol),
+                          place_lanes(mesh, maxiter_vec))
+
+            step_sharded._cache_size = fn._cache_size
+            return step_sharded
 
         return _cached(key, make)
 
@@ -658,7 +705,19 @@ def make_vm_stepper(*, backend, scheme, bucket, chunk, layout=None,
             c = chunked(cond, tick, _spec_carry_of(state, plan))
             return _state_of_spec_carry(c, state, plan)
 
-        return jax.jit(step, donate_argnums=(1,) if donate else ())
+        fn = jax.jit(step, donate_argnums=(1,) if donate else ())
+        if mesh is None:
+            return fn
+        from repro.core.shard import place_lanes, place_vm_state
+
+        def step_sharded(mat, state, tol, maxiter_vec):
+            return fn(place_lanes(mesh, mat),
+                      place_vm_state(mesh, state),
+                      place_lanes(mesh, tol),
+                      place_lanes(mesh, maxiter_vec))
+
+        step_sharded._cache_size = fn._cache_size
+        return step_sharded
 
     return _cached(key, make_spec)
 

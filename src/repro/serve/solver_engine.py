@@ -95,9 +95,11 @@ from repro.core.precision import get_scheme
 from repro.core.vm import BatchedVMState, make_vm_stepper
 from repro.sparse.csr import CSRMatrix
 from repro.sparse.ellpack import csr_to_ellpack
+from repro.core.shard import mesh_shards
 from repro.sparse.stacking import (SELL_SLICE_ROWS, _sell_groups, bucket_up,
                                    choose_layout, csr_rowell, index_dtype,
-                                   pad_ellpack, sell_slice_widths, stack_sell)
+                                   lane_bucket_up, pad_ellpack,
+                                   sell_slice_widths, stack_sell)
 
 __all__ = ["SolverEngineConfig", "SolverEngine"]
 
@@ -125,6 +127,9 @@ class SolverEngineConfig:
     detect: bool = True               # in-loop breakdown detection
     escalate_fp64: bool = False       # retry a breakdown once at fp64
     escalate_scheme: str = "fp64"     # where escalation re-routes to
+    mesh: Optional[object] = None     # jax.sharding.Mesh over the lane
+    #                                   axis (repro.core.shard.lane_mesh);
+    #                                   None = single-device pools
 
 
 @partial(jax.jit, static_argnames=("scheme",))
@@ -173,7 +178,15 @@ class _Pool:
         self.metrics = metrics if metrics is not None else Metrics()
         self.program_np = np.asarray(canonical_program(policy), np.int32)
         self.program = jnp.asarray(self.program_np)
-        self.slots = cfg.batch_slots             # current lane capacity
+        self.mesh = cfg.mesh
+        self.n_dev = mesh_shards(cfg.mesh)
+        # Lane capacity: with a mesh the lane axis must stay divisible
+        # by the shard count (NamedSharding), so the cap and every
+        # resize round through lane_bucket_up (device-count-aware).
+        self.capacity = (cfg.batch_slots if self.mesh is None
+                         else lane_bucket_up(cfg.batch_slots,
+                                             parts=self.n_dev))
+        self.slots = self.capacity               # current lane capacity
         self.req_of_slot: list = [None] * self.slots   # request id or None
         self.n_of_slot = np.zeros(self.slots, np.int64)  # logical n per slot
         self.csr_of_slot: list = [None] * self.slots  # kept for sell rebuild
@@ -196,6 +209,11 @@ class _Pool:
         come straight from the CSR in :meth:`admit`.
         """
         return (m.n_row_blocks, m.n_slabs, m.ell, m.n_col_tiles)
+
+    def _lane_round(self, want: int) -> int:
+        """Next lane-bucket edge — shard-divisible under a mesh."""
+        return (bucket_up(want) if self.mesh is None
+                else lane_bucket_up(want, parts=self.n_dev))
 
     def _n_pad(self, dims):
         if self.layout == "sell" or self.cfg.backend == "xla":
@@ -307,9 +325,9 @@ class _Pool:
     def admit(self, a, b, x0, tol, maxiter) -> int:
         """Place one system into a free slot; returns the slot index."""
         free = [s for s, r in enumerate(self.req_of_slot) if r is None]
-        if not free and self.slots < self.cfg.batch_slots:
+        if not free and self.slots < self.capacity:
             # Compaction shrank the pool; grow lanes back for this admit.
-            self.slots = min(self.cfg.batch_slots, bucket_up(self.slots + 1))
+            self.slots = min(self.capacity, self._lane_round(self.slots + 1))
             self._alloc(self.bucket)
             free = [s for s, r in enumerate(self.req_of_slot) if r is None]
         if not free:
@@ -465,7 +483,7 @@ class _Pool:
             col_tile=cfg.col_tile,
             n_col_tiles=self.bucket[-1] if ellpack else None,
             steps_per_sync=cfg.steps_per_sync, donate=cfg.donate,
-            detect=cfg.detect, interpret=self.interpret)
+            detect=cfg.detect, interpret=self.interpret, mesh=self.mesh)
         # Materialize the pre-step counters to host before the call —
         # with cfg.donate the state operand is consumed by the stepper.
         it0 = np.asarray(self.state.it)
@@ -538,7 +556,14 @@ class _Pool:
         Every VM op is lane-independent, so repacking is bitwise-neutral
         per lane; it trades one retrace (new lane count) for every
         subsequent tick costing arithmetic proportional to live lanes.
-        Returns True if the pool was repacked."""
+        Returns True if the pool was repacked.
+
+        Under a lane mesh compaction is **device-local**: slot ``s``
+        lives on shard ``s // (S/D)``, and live lanes are repacked
+        within their own shard only — migrating a live lane would move
+        its in-flight VM state across devices mid-solve.  The per-shard
+        lane bucket is sized by the fullest shard, so the compacted
+        lane count stays shard-divisible."""
         if self.state is None:
             return False
         S = self.slots
@@ -546,12 +571,29 @@ class _Pool:
         live = len(occ)
         if live == 0:
             return False
-        target = bucket_up(live)
-        if target >= S or live / S >= self.cfg.compact_fraction:
-            return False
-        sel = np.asarray(occ[:target] +
-                         [s for s in range(S) if s not in occ][: target - live],
-                         np.int64)
+        D = self.n_dev
+        if D <= 1:
+            target = bucket_up(live)
+            if target >= S or live / S >= self.cfg.compact_fraction:
+                return False
+            sel = np.asarray(
+                occ[:target] +
+                [s for s in range(S) if s not in occ][: target - live],
+                np.int64)
+        else:
+            per = S // D
+            by_shard = [[s for s in occ if s // per == d] for d in range(D)]
+            t_per = bucket_up(max(len(o) for o in by_shard))
+            target = t_per * D
+            if target >= S or live / S >= self.cfg.compact_fraction:
+                return False
+            sel_l: list = []
+            for d, o in enumerate(by_shard):
+                base = d * per
+                free = [s for s in range(base, base + per)
+                        if self.req_of_slot[s] is None]
+                sel_l += (o + free)[:t_per]
+            sel = np.asarray(sel_l, np.int64)
         sel_j = jnp.asarray(sel)
         self.mat = tuple(arr[sel_j] for arr in self.mat)
         st = self.state
@@ -614,6 +656,7 @@ class SolverEngine:
         pools = {
             f"{sch}/{pol}": {
                 "slots": p.slots,
+                "shards": p.n_dev,
                 "occupied": sum(r is not None for r in p.req_of_slot),
                 "active": (int(p.state.active.sum())
                            if p.state is not None else 0),
@@ -641,13 +684,17 @@ class SolverEngine:
         components fall back to the engine defaults); an uninstantiated
         pool reports its full capacity.
         """
+        cap0 = (self.cfg.batch_slots if self.cfg.mesh is None
+                else lane_bucket_up(self.cfg.batch_slots,
+                                    parts=mesh_shards(self.cfg.mesh)))
+
         def pool_free(p: Optional[_Pool]) -> int:
             if p is None:
-                return self.cfg.batch_slots
+                return cap0
             # Capacity view: lanes a compacted pool currently materializes
             # is an implementation detail — admission grows them back, so
             # free capacity is configured slots minus occupied ones.
-            return self.cfg.batch_slots - sum(
+            return p.capacity - sum(
                 r is not None for r in p.req_of_slot)
 
         if pool is not None:

@@ -29,7 +29,8 @@ import numpy as np
 from repro.sparse.bell import BellMatrix
 from repro.sparse.ellpack import EllpackMatrix
 
-__all__ = ["bucket_up", "pad_bell", "stack_bell", "pad_ellpack",
+__all__ = ["bucket_up", "lane_bucket_up", "pad_bell", "stack_bell",
+           "pad_ellpack",
            "stack_ellpack", "flatten_bell", "stack_flat", "csr_rowell",
            "stack_rowell", "stack_sell", "StackedBell", "StackedEllpack",
            "StackedFlat", "StackedRowEll", "StackedSell",
@@ -47,6 +48,24 @@ def bucket_up(x: int, *, minimum: int = 1) -> int:
     """
     x = max(int(x), minimum)
     return 1 << (x - 1).bit_length()
+
+
+def lane_bucket_up(x: int, *, parts: int = 1, minimum: int = 1) -> int:
+    """Round a *lane* count up to a bucket edge that ``parts`` shards
+    divide evenly.
+
+    The lane-sharded serving pool (:mod:`repro.core.shard`) partitions
+    the lane axis over D devices with ``NamedSharding``, which requires
+    the axis to divide by D — so its lane buckets are the power-of-two
+    edges of :func:`bucket_up` rounded up to a multiple of ``parts``.
+    ``parts=1`` degenerates to :func:`bucket_up` exactly (the
+    single-device pool's lane policy, unchanged).
+    """
+    t = bucket_up(x, minimum=minimum)
+    parts = max(int(parts), 1)
+    if parts > 1:
+        t = -(-t // parts) * parts
+    return t
 
 
 def _pad_axis(a: np.ndarray, axis: int, size: int) -> np.ndarray:

@@ -1,0 +1,104 @@
+"""Shared bit-identity oracle assertions (ISSUE 10).
+
+Every variant axis in this suite — engine (phases vs generic VM vs
+specialized VM), layout (row-ELL vs sliced-ELL), backend (XLA vs
+Pallas), iteration chunking, donation, and now lane sharding — is held
+to the same standard: **bitwise** agreement with a reference run, not
+"close enough".  These helpers are the one place that standard is
+written down; test modules import them instead of re-rolling ad-hoc
+``np.array_equal`` loops so a strengthened check strengthens every
+caller at once.
+
+Conventions:
+
+* ``equal_nan=True`` everywhere — a poisoned (non-finite) lane must be
+  *identically* poisoned in both runs; mismatched NaN placement still
+  fails because ``array_equal`` compares element-wise positions.
+* lane indices appear in every failure message, so a 16-lane sweep
+  failing on lane 11 says so.
+"""
+import numpy as np
+
+__all__ = [
+    "assert_lane_equal",
+    "assert_results_bit_identical",
+    "assert_statuses",
+    "assert_vm_states_equal",
+]
+
+
+def assert_lane_equal(r1, r2, g=None, *, rr=False, trace=False,
+                      status=False):
+    """One lane's result equals another, bitwise.
+
+    Always checks ``iterations`` and ``x``; opt into ``rr`` (final
+    squared residual), ``residual_trace`` and ``status`` where the
+    caller's contract covers them.
+    """
+    tag = "" if g is None else f"lane {g}: "
+    assert r1.iterations == r2.iterations, (
+        f"{tag}iterations differ: {r1.iterations} != {r2.iterations}")
+    if status:
+        assert r1.status == r2.status, (
+            f"{tag}status differs: {r1.status} != {r2.status}")
+    if rr:
+        assert np.array_equal(np.asarray(r1.rr), np.asarray(r2.rr),
+                              equal_nan=True), (
+            f"{tag}rr differs: {r1.rr} != {r2.rr}")
+    assert np.array_equal(np.asarray(r1.x), np.asarray(r2.x),
+                          equal_nan=True), f"{tag}x differs"
+    if trace:
+        assert np.array_equal(np.asarray(r1.residual_trace),
+                              np.asarray(r2.residual_trace),
+                              equal_nan=True), (
+            f"{tag}residual trace differs")
+
+
+def assert_results_bit_identical(got, ref, **lane_kw):
+    """Two result sequences agree lane-for-lane (see assert_lane_equal;
+    keyword options are forwarded per lane)."""
+    assert len(got) == len(ref), (
+        f"result counts differ: {len(got)} != {len(ref)}")
+    for g, (r, r0) in enumerate(zip(got, ref)):
+        assert_lane_equal(r, r0, g, **lane_kw)
+
+
+def assert_statuses(results, expected, *, healthy=(), maxiter=None):
+    """Structured-exit oracle: lanes in ``expected`` (index -> status
+    string) terminated with exactly that diagnosis, did not claim
+    convergence, and — when ``maxiter`` is given — froze before
+    spinning out the budget; lanes in ``healthy`` CONVERGED."""
+    for g, want in expected.items():
+        r = results[g]
+        assert r.status == want, f"lane {g}: {r.status} != {want}"
+        assert not r.converged, f"lane {g}: {want} but converged"
+        if maxiter is not None:
+            assert r.iterations < maxiter, (
+                f"lane {g}: froze late ({r.iterations} >= {maxiter})")
+    for g in healthy:
+        r = results[g]
+        assert r.status == "CONVERGED" and r.converged, (
+            f"lane {g}: expected CONVERGED, got {r.status}")
+
+
+def _field(state, name):
+    """A VM-state field from either a BatchedVMState or a snapshot dict."""
+    if isinstance(state, dict):
+        return np.asarray(state[name])
+    return np.asarray(getattr(state, name))
+
+
+def assert_vm_states_equal(st1, st2, *, lane=None,
+                           fields=("it", "mem", "queues", "sregs")):
+    """Two VM states (or host snapshots of them) are bitwise equal on
+    ``fields`` — for one lane's slice when ``lane`` is given, else on
+    the full lane axis.  ``mem``/``queues``/``sregs`` carry lanes on
+    axis 1, ``it``/``status``/``active`` on axis 0."""
+    for f in fields:
+        a, b = _field(st1, f), _field(st2, f)
+        if lane is not None:
+            a, b = (a[:, lane], b[:, lane]) if a.ndim > 1 else \
+                   (a[lane], b[lane])
+        assert np.array_equal(a, b, equal_nan=True), (
+            f"VM state field {f!r} differs"
+            + ("" if lane is None else f" on lane {lane}"))

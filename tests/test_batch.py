@@ -11,6 +11,8 @@ from repro.sparse import (csr_to_dense, diag_dominant_spd, poisson_2d,
                           random_spd, tridiagonal_spd)
 from repro.sparse.stacking import bucket_up
 from repro.serve.solver_engine import SolverEngine, SolverEngineConfig
+from oracles import (assert_lane_equal, assert_results_bit_identical,
+                     assert_vm_states_equal)
 
 BK = dict(block_rows=8, col_tile=128)
 
@@ -288,13 +290,7 @@ class TestSolverEngine:
         snap = {f: np.asarray(getattr(pool.state, f))
                 for f in ("mem", "queues", "sregs", "it")}
         eng.step()
-        assert np.array_equal(np.asarray(pool.state.mem)[:, frozen],
-                              snap["mem"][:, frozen])
-        assert np.array_equal(np.asarray(pool.state.queues)[:, frozen],
-                              snap["queues"][:, frozen])
-        assert np.array_equal(np.asarray(pool.state.sregs)[:, frozen],
-                              snap["sregs"][:, frozen])
-        assert int(pool.state.it[frozen]) == int(snap["it"][frozen])
+        assert_vm_states_equal(pool.state, snap, lane=frozen)
 
     def test_free_slots_sums_across_pools(self):
         """free_slots() counts capacity across every instantiated pool
@@ -357,14 +353,7 @@ class TestIterationChunking:
         base = self._solve(probs, 1, engine=engine, **kw)
         for k in self.CHUNKS:
             res = self._solve(probs, k, engine=engine, **kw)
-            for r0, r in zip(base, res):
-                assert r.iterations == r0.iterations
-                assert r.rr == r0.rr
-                np.testing.assert_array_equal(np.asarray(r.x),
-                                              np.asarray(r0.x))
-                np.testing.assert_array_equal(
-                    np.asarray(r.residual_trace),
-                    np.asarray(r0.residual_trace))
+            assert_results_bit_identical(res, base, rr=True, trace=True)
 
     @pytest.mark.parametrize("engine,kw", [
         ("phases", {}),
@@ -382,10 +371,7 @@ class TestIterationChunking:
             res = self._solve(probs, k, engine=engine, maxiter=37,
                               tol=1e-30, **kw)
             assert res[0].iterations == 37
-            assert res[0].rr == base[0].rr
-            np.testing.assert_array_equal(
-                np.asarray(res[0].residual_trace),
-                np.asarray(base[0].residual_trace))
+            assert_lane_equal(res[0], base[0], 0, rr=True, trace=True)
 
 
 class TestDonationAndCompaction:
@@ -419,10 +405,7 @@ class TestDonationAndCompaction:
             rids = [eng.submit(a) for a in probs]
             eng.run_to_completion()
             outs.append([eng.results[r] for r in rids])
-        for r0, r1 in zip(*outs):
-            assert r0.iterations == r1.iterations
-            np.testing.assert_array_equal(np.asarray(r0.x),
-                                          np.asarray(r1.x))
+        assert_results_bit_identical(outs[1], outs[0])
 
     def test_compaction_shrinks_pool_and_preserves_results(self):
         """Seven easy lanes converge early; once they harvest, the pool

@@ -35,6 +35,7 @@ from repro.core.metrics import (reset_solver_metrics, solver_metrics,
                                 tick_health)
 from repro.serve.solver_engine import SolverEngine, SolverEngineConfig
 from repro.sparse import csr_from_coo, random_spd, tridiagonal_spd
+from oracles import assert_lane_equal, assert_statuses
 
 pytestmark = pytest.mark.health
 
@@ -91,19 +92,8 @@ def _poison_bag(n, seed):
 
 
 def _check_poisoned(results):
-    for g, want in EXPECTED.items():
-        r = results[g]
-        assert r.status == want, f"lane {g}: {r.status} != {want}"
-        assert not r.converged
-        assert r.iterations < MAXITER     # froze early, didn't spin
-    for g in (0, 1):
-        assert results[g].status == "CONVERGED" and results[g].converged
-
-
-def _assert_lane_equal(r1, r2, g):
-    assert r1.iterations == r2.iterations, f"lane {g} iterations differ"
-    assert np.array_equal(np.asarray(r1.x), np.asarray(r2.x),
-                          equal_nan=True), f"lane {g} x differs"
+    """Shared oracle, specialized to :func:`_poison_bag`'s lane map."""
+    assert_statuses(results, EXPECTED, healthy=(0, 1), maxiter=MAXITER)
 
 
 class TestPoisonedBag:
@@ -127,13 +117,12 @@ class TestPoisonedBag:
         off = jpcg_solve_batched(probs, bs, engine="vm", detect=False, **kw)
         for g in (0, 1):
             assert off[g].status == "CONVERGED"
-            _assert_lane_equal(vm[g], off[g], g)
+            assert_lane_equal(vm[g], off[g], g)
         # Phases oracle: same statuses everywhere, bit-identical lanes
         # (poisoned lanes freeze at the same pre-tick state too).
         ph = jpcg_solve_batched(probs, bs, engine="phases", **kw)
         for g, (v, p) in enumerate(zip(vm, ph)):
-            assert v.status == p.status, f"lane {g}"
-            _assert_lane_equal(v, p, g)
+            assert_lane_equal(v, p, g, status=True)
 
     @given(n=st.sampled_from([16, 24, 40]), seed=st.integers(0, 2**16))
     @settings(deadline=None, max_examples=6)
@@ -150,7 +139,7 @@ class TestPoisonedBag:
             off = jpcg_solve_batched(probs, bs, engine=engine,
                                      detect=False, **kw)
             for g in (0, 1):
-                _assert_lane_equal(on[g], off[g], g)
+                assert_lane_equal(on[g], off[g], g)
 
     def test_generic_vm_path_detects(self):
         """The traced-program (specialize=False) VM path carries the
@@ -162,8 +151,7 @@ class TestPoisonedBag:
         _check_poisoned(gen)
         spec = jpcg_solve_batched(probs, bs, engine="vm", **kw)
         for g, (a_, b_) in enumerate(zip(spec, gen)):
-            assert a_.status == b_.status
-            _assert_lane_equal(a_, b_, g)
+            assert_lane_equal(a_, b_, g, status=True)
 
     def test_with_status_false_is_legacy(self):
         """Satellite c: ``with_status=False`` restores the pre-ISSUE-9
@@ -177,7 +165,7 @@ class TestPoisonedBag:
             assert r1.status is not None
             assert r0.status is None
             assert "status" not in repr(r0)
-            _assert_lane_equal(r1, r0, g)
+            assert_lane_equal(r1, r0, g)
 
     def test_maxiter_vs_breakdown_distinguished(self):
         """A slow-but-healthy lane exhausting its budget is MAXITER,

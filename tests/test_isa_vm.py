@@ -10,6 +10,7 @@ from repro.core.isa import (ITYPE_COMP, ITYPE_CTRL, ITYPE_NOP, ITYPE_VCTRL,
                             pad_program)
 from repro.core.vm import vm_solve
 from repro.sparse import poisson_2d, tridiagonal_spd
+from oracles import assert_vm_states_equal
 
 
 def test_encoding_roundtrip():
@@ -220,13 +221,7 @@ def test_frozen_lane_state_is_bit_stable_through_stepper(specialize):
             for f in ("mem", "queues", "sregs", "it")}
     st2 = step(st)
     assert int(st2.k) > int(st.k)                # the live lane advanced
-    assert np.array_equal(np.asarray(st2.mem[:, frozen]),
-                          snap["mem"][:, frozen])
-    assert np.array_equal(np.asarray(st2.queues[:, frozen]),
-                          snap["queues"][:, frozen])
-    assert np.array_equal(np.asarray(st2.sregs[:, frozen]),
-                          snap["sregs"][:, frozen])
-    assert int(st2.it[frozen]) == int(snap["it"][frozen])
+    assert_vm_states_equal(st2, snap, lane=frozen)
 
 
 @pytest.mark.vm
@@ -269,9 +264,7 @@ def test_stepper_chunk_sizes_bit_identical(specialize):
     for sps in (4, 8):
         st = finals[sps]
         assert int(st.k) == int(ref.k)
-        for f in ("it", "mem", "queues", "sregs"):
-            assert np.array_equal(np.asarray(getattr(st, f)),
-                                  np.asarray(getattr(ref, f))), (sps, f)
+        assert_vm_states_equal(st, ref)
 
 
 @pytest.mark.vm
@@ -320,9 +313,7 @@ def test_donating_stepper_consumes_input_state(specialize):
         st0 = make_vm_runner(maxiter=0, with_trace=False, **bk)(
             jnp.asarray(prog), mat, diag, b, x0, tolv)
         st3 = plain(jnp.asarray(prog), mat, st0, tolv, mv)
-    for f in ("it", "mem", "queues", "sregs"):
-        assert np.array_equal(np.asarray(getattr(st2, f)),
-                              np.asarray(getattr(st3, f))), f
+    assert_vm_states_equal(st2, st3)
 
 
 def test_pad_program_rejects_truncation():

@@ -25,6 +25,7 @@ from repro.sparse.stacking import (choose_layout, csr_rowell,
                                    stack_sell)
 from repro.serve.solver_engine import SolverEngine, SolverEngineConfig
 from tests._hyp import given, settings, strategies as st
+from tests.oracles import assert_results_bit_identical
 
 BK = dict(block_rows=8, col_tile=128)
 
@@ -225,10 +226,7 @@ class TestFrontDoorWiring:
                                     **kw)
         for lay in ("rowell", "sell", "auto"):
             got = jpcg_solve_batched(skew, layout=lay, **kw)
-            for r, o in zip(got, oracle):
-                assert r.iterations == o.iterations, lay
-                assert np.array_equal(np.asarray(r.x), np.asarray(o.x)), \
-                    f"layout={lay} not bit-identical to the phases oracle"
+            assert_results_bit_identical(got, oracle)
 
     def test_executable_key_splits_on_layout_and_index_width(self):
         from repro.core.compile import executable_key
@@ -297,8 +295,5 @@ class TestSolverParity:
         vm = jpcg_solve_batched(bag, engine="vm", layout="sell", **kw)
         pal = jpcg_solve_batched(bag, engine="vm", layout="sell",
                                  backend="pallas", interpret=True, **kw)
-        for o, v, p in zip(oracle, vm, pal):
-            assert v.iterations == o.iterations
-            assert p.iterations == o.iterations
-            assert np.array_equal(np.asarray(v.x), np.asarray(o.x))
-            assert np.array_equal(np.asarray(p.x), np.asarray(o.x))
+        assert_results_bit_identical(vm, oracle)
+        assert_results_bit_identical(pal, oracle)
